@@ -1,0 +1,48 @@
+"""Figure 8 analog — edge LLM inference TTFT / ITL on the paper's own case
+study model (Llama-2-110M architecture, int8 weights).
+
+Baseline = fp32 engine; Aquas = int8-quantized weights (the paper's 8-bit
+deployment; weight bytes at rest halve) — both measured on this CPU host.
+Absolute times are CPU-host numbers; the paper's 9.3×/9.13× FPGA speedups
+are RTL-vs-RTL and not reproducible here (see EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.serve.engine import ServeEngine, quantization_error, \
+    quantize_params_int8
+
+
+def run() -> list[str]:
+    rows = []
+    smoke = os.environ.get("BENCH_SMOKE", "1") == "1"
+    cfg = get_config("llama110m")
+    if smoke:
+        cfg = reduced(cfg)
+    B, prompt_len, gen = (4, 32, 16) if smoke else (4, 128, 32)
+    batch = {"tokens": jnp.ones((B, prompt_len), jnp.int32)}
+    max_len = prompt_len + gen + 8
+
+    eng = ServeEngine(cfg, max_len=max_len, seed=0)
+    _, base = eng.generate(batch, gen)
+    qtree, dequant = quantize_params_int8(eng.params)
+    qerr = quantization_error(eng.params, qtree, dequant)
+    engq = ServeEngine(cfg, params=eng.params, max_len=max_len,
+                      quantize=True)
+    _, aq = engq.generate(batch, gen)
+
+    rows.append(f"serve/ttft_base,{base.ttft_s * 1e6:.0f},"
+                f"batch={B};prompt={prompt_len}")
+    rows.append(f"serve/ttft_int8,{aq.ttft_s * 1e6:.0f},"
+                f"ratio={base.ttft_s / max(aq.ttft_s, 1e-9):.2f}x")
+    rows.append(f"serve/itl_base,{base.itl_s * 1e6:.0f},"
+                f"tok_per_s={base.tokens_per_s:.1f}")
+    rows.append(f"serve/itl_int8,{aq.itl_s * 1e6:.0f},"
+                f"tok_per_s={aq.tokens_per_s:.1f}")
+    rows.append(f"serve/quant_err,{qerr * 1e6:.1f},rel_L1_x1e-6")
+    return rows

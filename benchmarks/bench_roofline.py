@@ -1,0 +1,48 @@
+"""Roofline report — aggregates the dry-run artifacts (runs/dryrun/*.json)
+into the per-(arch × shape × mesh) three-term table for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir: str = "runs/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    lines = ["arch,shape,mesh,ok,compute_s,memory_s,collective_s,"
+             "bottleneck,useful_ratio,args_GB,compile_s"]
+    for r in recs:
+        rl = r.get("roofline", {})
+        mem = r.get("memory", {})
+        args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{int(r['ok'])},"
+            f"{rl.get('compute_s', 0):.4f},{rl.get('memory_s', 0):.4f},"
+            f"{rl.get('collective_s', 0):.4f},{rl.get('bottleneck', '-')},"
+            f"{rl.get('useful_ratio', 0):.3f},{args_gb:.2f},"
+            f"{r.get('compile_s', 0):.1f}")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    recs = load_records()
+    if not recs:
+        return ["roofline/cells,0,no dryrun artifacts (run "
+                "python -m repro.launch.dryrun first)"]
+    ok = sum(r["ok"] for r in recs)
+    rows = [f"roofline/cells,{len(recs)},ok={ok}"]
+    bottlenecks: dict[str, int] = {}
+    for r in recs:
+        b = r.get("roofline", {}).get("bottleneck", "-")
+        bottlenecks[b] = bottlenecks.get(b, 0) + 1
+    for b, n in sorted(bottlenecks.items()):
+        rows.append(f"roofline/bottleneck_{b},{n},cells")
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    Table 2  → bench_kernels       (per-ISAX speedups via the compiler)
+    Table 3  → bench_compile_stats (e-graph compilation statistics)
+    Fig 2/3  → bench_synthesis     (interface-model decision quality)
+    Fig 8    → bench_llm_serve     (LLM TTFT/ITL, int8)
+    §Roofline→ bench_roofline      (dry-run aggregate)
+
+Prints ``name,us_per_call,derived`` CSV.  Env: BENCH_SMOKE=0 for full sizes.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_compile_stats, bench_kernels,
+                            bench_llm_serve, bench_roofline, bench_synthesis)
+    modules = [
+        ("synthesis", bench_synthesis),
+        ("kernels", bench_kernels),
+        ("compile_stats", bench_compile_stats),
+        ("llm_serve", bench_llm_serve),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

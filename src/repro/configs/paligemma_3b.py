@@ -1,0 +1,22 @@
+"""paligemma-3b [vlm] — SigLIP + gemma backbone [arXiv:2407.07726].
+
+18L d_model=2048 8H (GQA kv=1 → MQA) d_ff=16384 vocab=257216.
+The SigLIP vision frontend is a stub per assignment: ``input_specs`` provides
+256 precomputed patch embeddings per image, prepended with a prefix-LM mask.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=16384,
+    vocab=257216,
+    head_dim=256,
+    n_prefix_tokens=256,
+    tie_embeddings=True,
+)

@@ -1,0 +1,247 @@
+"""Kernel schedule synthesis: Aquas's interface-aware synthesis applied to
+Pallas kernel configuration (the TPU reading of "hardware generation").
+
+For each candidate tiling of a kernel we build the per-grid-step functional
+Aquas-IR program (the staging transfers the kernel's DMA pipeline performs),
+run the §4.3 synthesis pipeline to get a model-estimated DMA cycle count, add
+an MXU/VPU compute estimate, and pick the candidate minimizing the pipelined
+steady-state step time:
+
+    step_cycles ≈ max(compute_cycles, dma_cycles / overlap)
+
+where overlap = min(I_hbm, buffering depth).  Constraints: the working set of
+`buffering`-deep staging must fit the VMEM budget, and MXU-facing dims must be
+multiples of 128 (8 on the sublane axis for f32).
+
+This module is pure Python (no jax) so it can run at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+from repro.core import aquas_ir as ir
+from repro.core.interface_model import (
+    MXU_DIM,
+    TPU_CLOCK_HZ,
+    TPU_PEAK_FLOPS_BF16,
+    TPU_VMEM_BUDGET,
+    MemInterface,
+    tpu_interfaces,
+)
+from repro.core.synthesis import synthesize
+
+# MXU does a 128x128x128 bf16 matmul-accumulate per ~1 cycle equivalent:
+_MXU_FLOPS_PER_CYCLE = TPU_PEAK_FLOPS_BF16 / TPU_CLOCK_HZ  # ≈ 123k flops/cycle
+_VPU_FLOPS_PER_CYCLE = 8 * 128 * 2  # elementwise lanes
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    """Synthesized schedule consumed by the Pallas kernels."""
+
+    name: str
+    block_shapes: dict[str, tuple[int, ...]]
+    buffering: int                 # DMA pipeline depth (in-flight staging)
+    est_step_cycles: float
+    est_total_cycles: float
+    vmem_bytes: int
+    decisions: dict[str, str]
+
+    def block(self, key: str) -> tuple[int, ...]:
+        return self.block_shapes[key]
+
+
+def _round_to(x: int, mult: int) -> int:
+    return max(mult, (x // mult) * mult)
+
+
+def _candidate_tiles(dim: int, mult: int, caps: Iterable[int]) -> list[int]:
+    out = []
+    for c in caps:
+        t = min(dim, c)
+        t = _round_to(t, mult) if t >= mult else t
+        if t > 0 and t not in out:
+            out.append(t)
+    return out
+
+
+def _staging_program(
+    name: str, transfers: list[tuple[str, int, str]],
+) -> ir.FunctionalProgram:
+    """Per-grid-step staging as a functional Aquas-IR program.
+
+    transfers: list of (buffer_name, bytes, direction) for one grid step.
+    """
+    ops = [
+        ir.FuncOp(kind="transfer", name=nm, size_bytes=b,
+                  src_space=ir.Space.GLOBAL if d == "load" else ir.Space.REG,
+                  dst_space=ir.Space.SCRATCHPAD if d == "load" else ir.Space.GLOBAL,
+                  direction=d,
+                  cache_hint=ir.CacheHint.COLD)  # streamed tiles are cold
+        for nm, b, d in transfers
+    ]
+    return ir.FunctionalProgram(name, ops, {})
+
+
+def _dma_cycles(name: str, transfers: list[tuple[str, int, str]],
+                interfaces: dict[str, MemInterface] | None = None) -> float:
+    itfcs = interfaces or {"hbm_vmem": tpu_interfaces()["hbm_vmem"]}
+    t = synthesize(_staging_program(name, transfers), itfcs)
+    return t.total_cycles
+
+
+# ---------------------------------------------------------------------------
+# Matmul (used by int8_matmul and as the GEMM model for roofline napkin math)
+# ---------------------------------------------------------------------------
+
+def choose_matmul_blocks(
+    m: int, n: int, k: int,
+    dtype_bytes: int = 2,
+    acc_bytes: int = 4,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Pick (bm, bn, bk) + buffering for a tiled GEMM C[m,n] += A[m,k]@B[k,n]."""
+    itfc = tpu_interfaces()["hbm_vmem"]
+    best: KernelSchedule | None = None
+    sub = 8 if dtype_bytes == 4 else 16  # sublane multiple
+    for bm in _candidate_tiles(m, sub, (128, 256, 512)):
+        for bn in _candidate_tiles(n, MXU_DIM, (128, 256, 512, 1024)):
+            for bk in _candidate_tiles(k, MXU_DIM, (128, 256, 512, 1024, 2048)):
+                for buf in (2, 3):
+                    a_b = bm * bk * dtype_bytes
+                    b_b = bk * bn * dtype_bytes
+                    c_b = bm * bn * acc_bytes
+                    vmem = buf * (a_b + b_b) + c_b
+                    if vmem > vmem_budget:
+                        continue
+                    steps = (math.ceil(m / bm) * math.ceil(n / bn)
+                             * math.ceil(k / bk))
+                    dma = _dma_cycles("gemm_step",
+                                      [("a_tile", a_b, "load"),
+                                       ("b_tile", b_b, "load")])
+                    compute = 2 * bm * bn * bk / _MXU_FLOPS_PER_CYCLE
+                    overlap = min(itfc.I, buf)
+                    step = max(compute, dma / overlap)
+                    total = step * steps + dma  # + pipeline fill
+                    if best is None or total < best.est_total_cycles:
+                        best = KernelSchedule(
+                            name="matmul",
+                            block_shapes={"a": (bm, bk), "b": (bk, bn),
+                                          "c": (bm, bn)},
+                            buffering=buf,
+                            est_step_cycles=step,
+                            est_total_cycles=total,
+                            vmem_bytes=vmem,
+                            decisions={
+                                "bound": "compute" if compute >= dma / overlap
+                                         else "memory",
+                                "steps": str(steps),
+                            })
+    assert best is not None, "no feasible matmul tiling"
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+def choose_flash_blocks(
+    seq_q: int, seq_k: int, head_dim: int,
+    dtype_bytes: int = 2,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Pick (block_q, block_k) + buffering for the flash-attention ISAX.
+
+    Working set per step: Q tile (persistent across the kv loop — "warm"),
+    K/V tiles (streamed — "cold"), running stats, O accumulator.
+    """
+    best: KernelSchedule | None = None
+    hd = max(head_dim, MXU_DIM)  # lane-padded head dim
+    for bq in _candidate_tiles(seq_q, 8, (128, 256, 512, 1024)):
+        for bk in _candidate_tiles(seq_k, MXU_DIM, (128, 256, 512, 1024)):
+            for buf in (2, 3):
+                q_b = bq * hd * dtype_bytes
+                kv_b = 2 * bk * hd * dtype_bytes
+                o_b = bq * hd * 4
+                s_b = bq * bk * 4
+                vmem = q_b + buf * kv_b + o_b + s_b + bq * 4 * 2
+                if vmem > vmem_budget:
+                    continue
+                kv_steps = math.ceil(seq_k / bk)
+                q_steps = math.ceil(seq_q / bq)
+                dma = _dma_cycles("flash_step", [("kv_tile", kv_b, "load")])
+                flops = 2 * bq * bk * hd * 2 + 5 * bq * bk  # qk + pv + softmax
+                compute = (4 * bq * bk * hd / _MXU_FLOPS_PER_CYCLE
+                           + 5 * bq * bk / _VPU_FLOPS_PER_CYCLE)
+                overlap = min(tpu_interfaces()["hbm_vmem"].I, buf)
+                step = max(compute, dma / overlap)
+                total = (step * kv_steps + dma) * q_steps
+                if best is None or total < best.est_total_cycles:
+                    best = KernelSchedule(
+                        name="flash_attention",
+                        block_shapes={"q": (bq, head_dim), "kv": (bk, head_dim)},
+                        buffering=buf,
+                        est_step_cycles=step,
+                        est_total_cycles=total,
+                        vmem_bytes=vmem,
+                        decisions={
+                            "bound": "compute" if compute >= dma / overlap
+                                     else "memory",
+                            "kv_steps": str(kv_steps),
+                            "q_hint": "warm", "kv_hint": "cold",
+                        })
+    assert best is not None, "no feasible flash tiling"
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan
+# ---------------------------------------------------------------------------
+
+def choose_ssd_blocks(
+    seq: int, heads: int, head_dim: int, d_state: int,
+    dtype_bytes: int = 2,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Chunk length for the SSD (state-space duality) chunked scan.
+
+    Per chunk: X, B, C tiles streamed; running state (heads,hd,d_state) warm.
+    Intra-chunk cost is quadratic in chunk length (attention-like), state
+    update linear — the model balances the two against DMA.
+    """
+    best: KernelSchedule | None = None
+    for chunk in (128, 256, 512):
+        if chunk > seq:
+            chunk = seq
+        for buf in (2, 3):
+            x_b = chunk * head_dim * dtype_bytes
+            bc_b = 2 * chunk * d_state * dtype_bytes
+            state_b = head_dim * d_state * 4
+            vmem = buf * (x_b + bc_b) + state_b + chunk * chunk * 4
+            if vmem > vmem_budget:
+                continue
+            steps = math.ceil(seq / chunk)
+            dma = _dma_cycles("ssd_step", [("x", x_b, "load"),
+                                           ("bc", bc_b, "load")])
+            compute = (2 * chunk * chunk * head_dim
+                       + 4 * chunk * head_dim * d_state) / _MXU_FLOPS_PER_CYCLE
+            overlap = min(tpu_interfaces()["hbm_vmem"].I, buf)
+            step = max(compute, dma / overlap)
+            total = step * steps + dma
+            if best is None or total < best.est_total_cycles:
+                best = KernelSchedule(
+                    name="ssd_scan",
+                    block_shapes={"chunk": (chunk, head_dim),
+                                  "state": (head_dim, d_state)},
+                    buffering=buf,
+                    est_step_cycles=step,
+                    est_total_cycles=total,
+                    vmem_bytes=vmem,
+                    decisions={"bound": "compute" if compute >= dma / overlap
+                               else "memory",
+                               "chunks": str(steps)})
+    assert best is not None, "no feasible ssd tiling"
+    return best

@@ -1,0 +1,395 @@
+"""End-to-end retargetable compilation (paper §5, Figure 5).
+
+``compile_program`` runs the full flow over a software term:
+
+  (1) semantic alignment — programs and ISAXes are both written in the
+      ``core/expr.py`` mini-IR (the "base dialect" level of §5.1), with loop
+      indices alpha-normalized;
+  (2) e-graph encoding (anchors/tuple, §5.2);
+  (3) hybrid rewriting — internal algebraic saturation interleaved with
+      ISAX-guided external loop transforms (§5.3);
+  (4) skeleton-components matching, inserting ``isax:`` markers (§5.4);
+  (5) extraction with an ISAX-prioritizing cost model → offloaded program.
+
+``evaluate`` executes programs (numpy semantics) so tests can assert that the
+offloaded program is bit-compatible (allclose) with the original — with ISAX
+intrinsics bound to fused kernel implementations from ``kernels/``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import expr
+from repro.core.egraph import EGraph
+from repro.core.expr import Term, arr, const, for_, var
+from repro.core.matching import ISAX, decompose, match_isax
+from repro.core.rewrites import (
+    external_rewrite_pass,
+    saturate_internal,
+    structure_distance,
+)
+
+
+# ---------------------------------------------------------------------------
+# Compilation statistics (paper Table 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompileStats:
+    case: str
+    internal_rewrites: int = 0
+    external_rewrites: int = 0
+    initial_enodes: int = 0
+    saturated_enodes: int = 0
+    matched_isaxes: list[str] = dataclasses.field(default_factory=list)
+
+    def row(self) -> str:
+        return (f"{self.case},{self.internal_rewrites},"
+                f"{self.external_rewrites},{self.initial_enodes},"
+                f"{self.saturated_enodes},{'+'.join(self.matched_isaxes) or '-'}")
+
+
+@dataclasses.dataclass
+class OffloadResult:
+    program: Term
+    stats: CompileStats
+    egraph: EGraph
+
+
+def offload_cost(op: str, child_costs: list[float]) -> float:
+    """Extraction cost model that prioritizes ISAX e-nodes (§5.4)."""
+    if op.startswith("comp:"):
+        return float("inf")
+    if op.startswith("isax:"):
+        return 1.0 + sum(child_costs)
+    if op in ("matmul", "matvec", "outer"):
+        return 200.0 + sum(child_costs)
+    if op in ("exp", "sqrt", "rsqrt", "recip", "rowmax", "rowsum", "sum"):
+        return 20.0 + sum(child_costs)
+    if op.startswith("for:"):
+        return 50.0 + sum(child_costs)
+    return 2.0 + sum(child_costs)
+
+
+def compile_program(
+    program: Term,
+    isaxes: list[ISAX],
+    case: str = "case",
+    max_hybrid_rounds: int = 3,
+    node_limit: int = 60_000,
+) -> OffloadResult:
+    program = expr.normalize_indices(program)
+    eg = EGraph(node_limit=node_limit)
+    root = eg.add_term(program)
+    stats = CompileStats(case=case, initial_enodes=eg.n_nodes())
+
+    skels = {ix.name: decompose(ix) for ix in isaxes}
+
+    # Hybrid rewriting until saturation (or rounds exhausted): internal
+    # algebraic saturation, then ISAX-guided external loop restructuring.
+    for _ in range(max_hybrid_rounds):
+        stats.internal_rewrites += saturate_internal(eg)
+        ext_applied = 0
+        for ix in isaxes:
+            st = external_rewrite_pass(eg, root, skels[ix.name].loop_struct)
+            ext_applied += st.applied
+        stats.external_rewrites += ext_applied
+        if ext_applied == 0:
+            break
+    stats.internal_rewrites += saturate_internal(eg, max_iters=2)
+
+    # Skeleton-components matching per ISAX.
+    for ix in isaxes:
+        for m in match_isax(eg, ix, skels[ix.name]):
+            stats.matched_isaxes.append(m.isax)
+
+    stats.saturated_enodes = eg.n_nodes()
+    out = eg.extract(eg.find(root), offload_cost)
+    return OffloadResult(out, stats, eg)
+
+
+# ---------------------------------------------------------------------------
+# Evaluator (numpy semantics) — correctness oracle for offloaded programs
+# ---------------------------------------------------------------------------
+
+IntrinsicFn = Callable[..., None]  # mutates output array arguments in place
+
+_INTRINSICS: dict[str, IntrinsicFn] = {}
+
+
+def register_intrinsic(name: str, fn: IntrinsicFn) -> None:
+    _INTRINSICS[name] = fn
+
+
+def evaluate(t: Term, env: dict, intrinsics: dict[str, IntrinsicFn] | None = None):
+    """Execute a program term.  ``env`` maps array/var names to numpy arrays /
+    scalars; stores mutate arrays in place.  Returns the last value."""
+    table = dict(_INTRINSICS)
+    if intrinsics:
+        table.update(intrinsics)
+    return _eval(t, env, table)
+
+
+def _eval(t: Term, env: dict, intr) -> object:
+    o = expr.op(t)
+    kind = expr.leaf_kind(o)
+    if kind == "const":
+        return expr.leaf_value(o)
+    if kind in ("var", "arr"):
+        return env[o.split(":", 1)[1]]
+    ch = expr.children(t)
+
+    if o == "tuple":
+        out = None
+        for c in ch:
+            out = _eval(c, env, intr)
+        return out
+    if expr.is_for(t):
+        idx = expr.for_index(t)
+        start = int(_eval(ch[0], env, intr))
+        end = int(_eval(ch[1], env, intr))
+        step = int(_eval(ch[2], env, intr))
+        saved = env.get(idx, _MISSING)
+        for v in range(start, end, step):
+            env[idx] = v
+            _eval(ch[3], env, intr)
+        if saved is _MISSING:
+            env.pop(idx, None)
+        else:
+            env[idx] = saved
+        return None
+    if o == "store":
+        a = _eval(ch[0], env, intr)
+        idxs = tuple(int(_eval(c, env, intr)) for c in ch[1:-1])
+        val = _eval(ch[-1], env, intr)
+        a[idxs] = val
+        return None
+    if o == "load":
+        a = _eval(ch[0], env, intr)
+        idxs = tuple(int(_eval(c, env, intr)) for c in ch[1:])
+        return a[idxs]
+    if o.startswith("isax:"):
+        name = o.split(":", 1)[1]
+        args = [_eval(c, env, intr) for c in ch]
+        intr[name](*args)
+        return None
+
+    args = [_eval(c, env, intr) for c in ch]
+    return _apply(o, args)
+
+
+_MISSING = object()
+
+
+def _apply(o: str, a: list):
+    import numpy as np
+    if o == "+":
+        return a[0] + a[1]
+    if o == "-":
+        return a[0] - a[1]
+    if o == "*":
+        return a[0] * a[1]
+    if o == "/":
+        return a[0] / a[1]
+    if o == "<<":
+        return a[0] << a[1]
+    if o == ">>":
+        return a[0] >> a[1]
+    if o == "neg":
+        return -a[0]
+    if o == "exp":
+        return np.exp(a[0])
+    if o == "sqrt":
+        return np.sqrt(a[0])
+    if o == "rsqrt":
+        return 1.0 / np.sqrt(a[0])
+    if o == "recip":
+        return 1.0 / a[0]
+    if o in ("relu", "max0"):
+        return np.maximum(a[0], 0)
+    if o == "max":
+        return np.maximum(a[0], a[1])
+    if o == "min":
+        return np.minimum(a[0], a[1])
+    if o == "rowmax":
+        return np.max(a[0], axis=-1)
+    if o == "rowsum":
+        return np.sum(a[0], axis=-1)
+    if o == "rowmean":
+        return np.mean(a[0], axis=-1)
+    if o == "sum":
+        return np.sum(a[0])
+    if o == "matmul":
+        return a[0] @ a[1]
+    if o == "matvec":
+        return a[0] @ a[1]
+    if o == "outer":
+        return np.outer(a[0], a[1])
+    if o == "transpose":
+        return np.transpose(a[0])
+    if o == "dot":
+        return np.dot(a[0], a[1])
+    if o == "select":
+        return np.where(a[0], a[1], a[2])
+    raise NotImplementedError(f"evaluator op {o}")
+
+
+# ---------------------------------------------------------------------------
+# ISAX library: the specialized datapaths this "ASIP" ships (§6 analogues)
+# ---------------------------------------------------------------------------
+
+def isax_flash_attention() -> ISAX:
+    """Row-blocked attention: for each query row i, S[i] = softmax-numerator,
+    O[i] = normalized PV product.  Two components under two store anchors in
+    a single-loop skeleton (the paper's Figure 5 shape, adapted)."""
+    i = var("i")
+    q_row = ("load", arr("Q"), i)
+    s_row = ("/",
+             ("exp", ("-", ("*", var("scale"), ("matvec", arr("K"), q_row)),
+                      ("rowmax", ("*", var("scale"),
+                                  ("matvec", arr("K"), q_row))))),
+             ("rowsum", ("exp", ("-", ("*", var("scale"),
+                                       ("matvec", arr("K"), q_row)),
+                                 ("rowmax", ("*", var("scale"),
+                                             ("matvec", arr("K"), q_row)))))))
+    body_s = ("store", arr("P"), i, s_row)
+    body_o = ("store", arr("O"), i,
+              ("matvec", ("transpose", arr("V")), ("load", arr("P"), i)))
+    term = for_("i", const(0), var("n_q"), const(1), body_s, body_o)
+    return ISAX(
+        name="flash_attention",
+        params=("Q", "K", "V", "scale", "n_q", "P", "O"),
+        term=term,
+        kernel="flash_attention",
+        outputs=("P", "O"),
+    )
+
+
+def isax_int8_matvec() -> ISAX:
+    """Quantized GEMV: C[i] = s_w * (Wq @ x[i]) — the LLM-inference ISAX
+    (paper §6.5 uses 8-bit quantized Llama attention/FFN)."""
+    i = var("i")
+    term = for_("i", const(0), var("n"), const(1),
+                ("store", arr("C"), i,
+                 ("*", var("s_w"),
+                  ("matvec", arr("Wq"), ("load", arr("X"), i)))))
+    return ISAX(
+        name="int8_matvec",
+        params=("Wq", "X", "s_w", "n", "C"),
+        term=term,
+        kernel="int8_matmul",
+        outputs=("C",),
+    )
+
+
+def isax_ssd_step() -> ISAX:
+    """SSD (state-space duality) recurrence: H ← a_t·H + B_t⊗x_t;
+    y_t = H^T·C_t.  Loop-carried dependence through H (tests the §5.4
+    loop-carried check)."""
+    t = var("t")
+    upd = ("+",
+           ("*", ("load", arr("A"), t), ("load", arr("H"), const(0))),
+           ("outer", ("load", arr("B"), t), ("load", arr("X"), t)))
+    out = ("matvec", ("transpose", ("load", arr("H"), const(0))),
+           ("load", arr("C"), t))
+    term = for_("t", const(0), var("T"), const(1),
+                ("store", arr("H"), const(0), upd),
+                ("store", arr("Y"), t, out))
+    return ISAX(
+        name="ssd_step",
+        params=("A", "B", "C", "X", "T", "H", "Y"),
+        term=term,
+        kernel="ssd_scan",
+        outputs=("H", "Y"),
+    )
+
+
+def isax_rmsnorm() -> ISAX:
+    """Fused RMSNorm row op: O[i] = x * rsqrt(mean(x²) + eps) * g."""
+    i = var("i")
+    x = ("load", arr("Xn"), i)
+    term = for_("i", const(0), var("n"), const(1),
+                ("store", arr("On"), i,
+                 ("*", ("*", x, ("rsqrt",
+                                 ("+", ("rowmean", ("*", x, x)),
+                                  var("eps")))),
+                  arr("G"))))
+    return ISAX(
+        name="rmsnorm",
+        params=("Xn", "G", "eps", "n", "On"),
+        term=term,
+        kernel="rmsnorm",
+        outputs=("On",),
+    )
+
+
+def isax_swiglu() -> ISAX:
+    """Fused SwiGLU MLP row op: O[i] = ((Wg·x)·σ(Wg·x) ⊙ (Wu·x))ᵀ·Wo —
+    written with silu expanded to its x·sigmoid(x) = x/(1+exp(−x)) form so
+    software variants using either spelling match."""
+    i = var("i")
+    x = ("load", arr("Xs"), i)
+    g = ("matvec", arr("Wg"), x)
+    u = ("matvec", arr("Wu"), x)
+    silu_g = ("/", g, ("+", ("const:1",), ("exp", ("neg", g))))
+    term = for_("i", const(0), var("n"), const(1),
+                ("store", arr("Os"), i,
+                 ("matvec", ("transpose", arr("Wo")),
+                  ("*", silu_g, u))))
+    return ISAX(
+        name="swiglu",
+        params=("Wg", "Wu", "Wo", "Xs", "n", "Os"),
+        term=term,
+        kernel="swiglu",
+        outputs=("Os",),
+    )
+
+
+def isax_library() -> list[ISAX]:
+    return [isax_flash_attention(), isax_int8_matvec(), isax_ssd_step(),
+            isax_rmsnorm(), isax_swiglu()]
+
+
+# ---------------------------------------------------------------------------
+# Reference numpy intrinsics (kernels/ops.py registers the fused/Pallas ones)
+# ---------------------------------------------------------------------------
+
+def _np_flash_attention(Q, K, V, scale, n_q, P, O):
+    S = (Q @ K.T) * scale
+    Pm = np.exp(S - S.max(axis=-1, keepdims=True))
+    P[:] = Pm / Pm.sum(axis=-1, keepdims=True)
+    O[:] = P @ V
+
+
+def _np_int8_matvec(Wq, X, s_w, n, C):
+    C[:] = (X @ Wq.astype(np.float64).T) * s_w
+
+
+def _np_ssd_scan(A, B, C, X, T, H, Y):
+    h = H[0]
+    for t in range(int(T)):
+        h = A[t] * h + np.outer(B[t], X[t])
+        Y[t] = h.T @ C[t]
+    H[0] = h
+
+
+def _np_rmsnorm(Xn, G, eps, n, On):
+    ms = np.mean(Xn * Xn, axis=-1, keepdims=True)
+    On[:] = Xn / np.sqrt(ms + eps) * G
+
+
+def _np_swiglu(Wg, Wu, Wo, Xs, n, Os):
+    g = Xs @ Wg.T
+    u = Xs @ Wu.T
+    Os[:] = (g / (1.0 + np.exp(-g)) * u) @ Wo
+
+
+register_intrinsic("flash_attention", _np_flash_attention)
+register_intrinsic("int8_matvec", _np_int8_matvec)
+register_intrinsic("ssd_step", _np_ssd_scan)
+register_intrinsic("rmsnorm", _np_rmsnorm)
+register_intrinsic("swiglu", _np_swiglu)

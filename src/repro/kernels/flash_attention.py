@@ -1,0 +1,184 @@
+"""Flash-attention Pallas TPU kernel (the LLM-inference ISAX of paper §6.5,
+TPU-native: VMEM-staged KV streaming instead of BRAM scratchpads).
+
+Tiling and buffering come from the interface-aware synthesis flow
+(``core.kernel_synth.choose_flash_blocks``): Q tiles are "warm" (persistent
+across the kv loop), K/V tiles are "cold" (streamed), mirroring the paper's
+cache_hint machinery.
+
+Layout: q (B, S, H, hd), k/v (B, T, K, hd) with GQA head folding h → h // G
+in the BlockSpec index map.  Grid (B, H, nq, nk): the last grid dim iterates
+sequentially on TPU, so the running max / denominator / output accumulator
+live in VMEM scratch and are re-initialized at nk == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, sm_scale: float, n_kv: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
+    mask = mask_ref[0, :, :]                         # (bq, bk) bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq,)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m == NEG_INF): exp(NEG_INF - NEG_INF) = 1
+    # would pollute l; use alpha = exp(m_prev - m_new) with masked-safe forms.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _flash_kernel_int8kv(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
+                         o_ref, m_scr, l_scr, acc_scr,
+                         *, sm_scale: float, n_kv: int):
+    """int8-KV variant (the paper's §6.5 quantized-attention ISAX): K/V
+    stream HBM→VMEM as int8 (half the DMA bytes — what the interface model
+    rewards) and dequantize against per-head scales INSIDE the tile, so the
+    bf16 cache is never materialized."""
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0]
+    mask = mask_ref[0, :, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_int8kv(q, k8, v8, k_scale, v_scale, mask, *,
+                           sm_scale: float, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: (B,S,H,hd) float; k8/v8: (B,T,K,hd) int8; k_scale/v_scale: (K,)
+    per-kv-head fp32 scales; mask: (1|B,S,T) bool → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k8.shape[1], k8.shape[2]
+    G = H // K
+    bq, bk = min(block_q, S), min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    mask_b = mask.shape[0]
+    return pl.pallas_call(
+        functools.partial(_flash_kernel_int8kv, sm_scale=sm_scale, n_kv=nk),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1,), lambda b, h, qi, ki, G=G: (h // G,)),
+            pl.BlockSpec((1,), lambda b, h, qi, ki, G=G: (h // G,)),
+            pl.BlockSpec((1, bq, bk),
+                         lambda b, h, qi, ki, mb=mask_b:
+                         (b if mb > 1 else 0, qi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k8, v8, k_scale, v_scale, mask)
+
+
+def flash_attention(q, k, v, mask, *, sm_scale: float,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask: (1|B,S,T) bool → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    mask_b = mask.shape[0]
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, n_kv=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bq, bk),
+                         lambda b, h, qi, ki, mb=mask_b:
+                         (b if mb > 1 else 0, qi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out

@@ -1,0 +1,63 @@
+"""Int8-weight matmul Pallas kernel (paper §6.5: 8-bit quantized Llama
+inference; the mgf2mm-style "matrix engine" ISAX in TPU form).
+
+y[M,N] = (x[M,K] @ wq[N,K]^T) * scale[N]  with int8 weights dequantized
+against a per-output-channel fp32 scale inside the kernel (weights stream
+HBM→VMEM as int8 — halving DMA bytes vs bf16, which is what the interface
+model rewards).
+
+Grid (nm, nn, nk): accumulate in f32 VMEM scratch over the sequential k dim.
+Tile shapes come from ``core.kernel_synth.choose_matmul_blocks``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_mm_kernel(x_ref, w_ref, s_ref, o_ref, acc_scr, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)          # (bn, bk) int8 → f32
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        scale = s_ref[...].astype(jnp.float32)   # (bn,)
+        o_ref[...] = (acc_scr[...] * scale[None, :]).astype(o_ref.dtype)
+
+
+def int8_matmul(x, wq, scale, *, block_m: int = 128, block_n: int = 128,
+                block_k: int = 512, interpret: bool = False,
+                out_dtype=None):
+    """x: (M,K) float, wq: (N,K) int8, scale: (N,) → (M,N)."""
+    M, K = x.shape
+    N = wq.shape[0]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (x.shape, wq.shape)
+    grid = (M // bm, N // bn, K // bk)
+    out_dtype = out_dtype or x.dtype
+    return pl.pallas_call(
+        functools.partial(_int8_mm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bn, bk), lambda mi, ni, ki: (ni, ki)),
+            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, wq, scale)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, mask, *, sm_scale: float):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask: (1|B,S,T) → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * sm_scale
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -1e30 is uniform; zero them like the
+    # kernel (denominator clamp) does
+    any_valid = jnp.any(mask, axis=-1)[:, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def int8_matmul_ref(x, wq, scale):
+    """x: (M,K), wq: (N,K) int8, scale: (N,) → (M,N)."""
+    y = x.astype(jnp.float32) @ wq.astype(jnp.float32).T
+    return (y * scale.astype(jnp.float32)[None, :]).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive recurrence.  x: (BT,H,S,P), dt: (BT,H,S), A: (H,), B/C: (BT,S,N)."""
+    BT, H, S, P = x.shape
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # (BT,H,P), (BT,H), (BT,N), (BT,N)
+        decay = jnp.exp(dt_t * A[None, :])                     # (BT,H)
+        h = (decay[..., None, None] * h
+             + jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t))
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((BT, H, B.shape[-1], P), jnp.float32)
+    xs = (x.transpose(2, 0, 1, 3).astype(jnp.float32),
+          dt.transpose(2, 0, 1).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)  # (BT,H,S,P)
+
+
+def rmsnorm_ref(x, g, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,36 @@
+"""Fused RMSNorm Pallas kernel (the vector-unit ISAX: one pass over rows,
+fp32 statistics, fused scale — avoids the separate mean/rsqrt/mul HLO ops)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)          # (br, d)
+    g = g_ref[...].astype(jnp.float32)          # (d,)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm(x, g, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: (R, d) — callers flatten leading dims; g: (d,)."""
+    R, d = x.shape
+    br = min(block_rows, R)
+    assert R % br == 0, (R, br)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda ri: (ri, 0)),
+            pl.BlockSpec((d,), lambda ri: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda ri: (ri, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, g)

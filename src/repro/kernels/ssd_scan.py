@@ -1,0 +1,98 @@
+"""SSD chunked-scan Pallas kernel (mamba2/zamba2's state-space-duality step).
+
+Per (batch, head): the sequence is split into chunks of length Q; each grid
+step computes the intra-chunk attention-like masked product (MXU work) plus
+the inter-chunk contribution from the running state, then updates the state:
+
+    y[q] = Σ_{k≤q} (C_q·B_k)·exp(acum_q − acum_k)·dt_k·x_k   (intra)
+         + (C_q · h_prev) · exp(acum_q)                        (inter)
+    h   ← exp(acum_last) · h_prev + Σ_k exp(acum_last − acum_k)·dt_k·B_k⊗x_k
+
+The (N, P) running state lives in VMEM scratch across the sequential chunk
+grid dim — the "warm" buffer of the interface model; x/B/C/dt chunks stream
+as "cold" tiles.  Chunk length from ``core.kernel_synth.choose_ssd_blocks``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr,
+                *, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q,)
+    A = a_ref[0].astype(jnp.float32)           # () per-head
+    B = b_ref[0].astype(jnp.float32)           # (Q, N)
+    C = c_ref[0].astype(jnp.float32)           # (Q, N)
+
+    a = dt * A                                  # (Q,) negative increments
+    a_cum = jnp.cumsum(a)                       # (Q,)
+
+    # intra-chunk
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    decay = jnp.exp(a_cum[:, None] - a_cum[None, :])
+    Q = x.shape[0]
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    M = jnp.where(tril, scores * decay, 0.0)
+    y_intra = jax.lax.dot_general(M * dt[None, :], x,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk from running state
+    h_prev = state_scr[...]                     # (N, P)
+    y_inter = jax.lax.dot_general(C * jnp.exp(a_cum)[:, None], h_prev,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    decay_last = jnp.exp(a_cum[-1] - a_cum)     # (Q,)
+    wB = B * (decay_last * dt)[:, None]         # (Q, N)
+    new_state = (jnp.exp(a_cum[-1]) * h_prev
+                 + jax.lax.dot_general(wB, x, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32))
+    state_scr[...] = new_state
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x: (BT,H,S,P), dt: (BT,H,S), A: (H,), B/C: (BT,S,N) → y: (BT,H,S,P).
+
+    BT is the batch dim; B/C are shared across heads (indexed by batch only).
+    S must be a multiple of `chunk` (callers pad like models/mamba2 does).
+    """
+    BT, H, S, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    grid = (BT, H, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (256 chips, one v5e pod) or 2×16×16 (512 chips, two pods).
+
+    Axes: 'data' carries DP+FSDP, 'model' carries TP/EP/SP, 'pod' is pure DP
+    across pods (gradient all-reduce crosses the DCN/ICI boundary once per
+    step; params are not sharded across pods — see DESIGN.md §3.3).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh for CPU smoke tests of the sharded code path."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,38 @@
+"""Serving launcher CLI: ``python -m repro.launch.serve --arch <id> ...``."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--int8", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    eng = ServeEngine(cfg, max_len=args.prompt_len + args.tokens + 8,
+                      quantize=args.int8)
+    prompts = jax.random.randint(jax.random.key(0),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    toks, stats = eng.generate({"tokens": prompts}, args.tokens)
+    print(f"arch={cfg.name} int8={args.int8} out={toks.shape} "
+          f"TTFT={stats.ttft_s * 1e3:.1f}ms ITL={stats.itl_s * 1e3:.2f}ms "
+          f"({stats.tokens_per_s:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Training launcher CLI: ``python -m repro.launch.train --arch <id> ...``.
+
+Single-host execution path of the same Trainer the dry-run lowers for the
+production mesh.  Reduced configs via --smoke for CPU hosts.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.fault_tolerance import run_with_restarts
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    tc = TrainConfig(batch=args.batch, seq=args.seq,
+                     microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt_dir, total_steps=args.steps,
+                     optimizer=AdamWConfig(
+                         lr=args.lr, compress_grads=args.compress_grads))
+    tr = run_with_restarts(lambda: Trainer(cfg, tc), args.steps)
+    last = tr.metrics_log[-1]
+    print(f"done: step={tr.step} loss={last['loss']:.4f} "
+          f"step_time={last['step_time'] * 1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Encoder–decoder transformer (seamless-m4t-medium backbone).
+
+12 encoder + 12 decoder layers.  The audio frontend is a stub per the
+assignment: the encoder consumes precomputed frame embeddings
+(batch, n_frames, d_model) from ``input_specs``.  The decoder is a standard
+causal stack with cross-attention; decode shapes exercise ``decode_step``
+with a self-attention KV cache plus the (fixed) encoder output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _cross_attention(params, x, enc_out, cfg: ModelConfig, mask):
+    """Cross-attn: queries from x, keys/values from encoder output."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim()
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd),
+                   params["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd),
+                   params["wv"].astype(cd))
+    out = L._sdpa_xla(q, k, v, mask, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kenc, kdec, ku = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.n_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model,
+                                        L.dtype_of(cfg.param_dtype)),
+            "attn": L.init_attention(cfg, k1),
+            "mlp_norm": L.init_rmsnorm(cfg.d_model,
+                                       L.dtype_of(cfg.param_dtype)),
+            "mlp": L.init_mlp(cfg, k2),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model,
+                                        L.dtype_of(cfg.param_dtype)),
+            "attn": L.init_attention(cfg, k1),
+            "cross_norm": L.init_rmsnorm(cfg.d_model,
+                                         L.dtype_of(cfg.param_dtype)),
+            "cross": L.init_attention(cfg, k2),
+            "mlp_norm": L.init_rmsnorm(cfg.d_model,
+                                       L.dtype_of(cfg.param_dtype)),
+            "mlp": L.init_mlp(cfg, k3),
+        }
+
+    return {
+        "embed": L.init_embedding(cfg, ke),
+        "enc_blocks": jax.vmap(enc_block)(enc_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+        "dec_blocks": jax.vmap(dec_block)(dec_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model,
+                                     L.dtype_of(cfg.param_dtype)),
+        "unembed": {"w": (jax.random.normal(ku, (cfg.vocab, cfg.d_model))
+                          * cfg.d_model ** -0.5
+                          ).astype(L.dtype_of(cfg.param_dtype))},
+    }
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    def stacked(d):
+        return jax.tree.map(lambda ax: ("layers",) + ax, d,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    enc = {"attn_norm": L.rmsnorm_axes(), "attn": L.attention_axes(cfg),
+           "mlp_norm": L.rmsnorm_axes(), "mlp": L.mlp_axes()}
+    dec = {"attn_norm": L.rmsnorm_axes(), "attn": L.attention_axes(cfg),
+           "cross_norm": L.rmsnorm_axes(), "cross": L.attention_axes(cfg),
+           "mlp_norm": L.rmsnorm_axes(), "mlp": L.mlp_axes()}
+    return {
+        "embed": L.embedding_axes(),
+        "enc_blocks": stacked(enc),
+        "enc_norm": L.rmsnorm_axes(),
+        "dec_blocks": stacked(dec),
+        "final_norm": L.rmsnorm_axes(),
+        "unembed": {"w": ("vocab", "embed")},
+    }
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    B, T, _ = frame_embeds.shape
+    mask = L.make_mask("full", T)
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = frame_embeds.astype(L.dtype_of(cfg.compute_dtype))
+
+    def body(h, bp):
+        h = L.shard_act(h, "btd")
+        a, _ = L.attention(bp["attn"],
+                           L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
+                           cfg, mask, positions)
+        h = h + a
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
+                      cfg)
+        return h, None
+
+    body = L.remat_wrap(body, cfg.remat)
+    h, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decoder(params, x, enc_out, cfg, self_mask, cross_mask, positions,
+             collect_kv=False):
+    def body(h, bp):
+        h = L.shard_act(h, "btd")
+        a, kv = L.attention(bp["attn"],
+                            L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
+                            cfg, self_mask, positions)
+        h = h + a
+        h = h + _cross_attention(bp["cross"],
+                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps),
+                                 enc_out, cfg, cross_mask)
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
+                      cfg)
+        return h, kv if collect_kv else None
+
+    body = L.remat_wrap(body, cfg.remat)
+    h, kv = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps), kv
+
+
+def loss(params, batch, cfg: ModelConfig):
+    """batch: prefix_embeds (B,T,d) [audio frames], tokens (B,S), labels."""
+    enc_out = encode(params, batch["prefix_embeds"], cfg)
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    T = enc_out.shape[1]
+    self_mask = L.make_mask("causal", S)
+    cross_mask = L.make_mask("full", S, T)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, _ = _decoder(params, x, enc_out, cfg, self_mask, cross_mask, positions)
+    logits = L.unembed(params["unembed"]["w"], h, cfg)
+    logits = L.shard_act(logits, "btv")
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig, pad_to=None):
+    enc_out = encode(params, batch["prefix_embeds"], cfg)
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    T = enc_out.shape[1]
+    self_mask = L.make_mask("causal", S)
+    cross_mask = L.make_mask("full", S, T)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, kv = _decoder(params, x, enc_out, cfg, self_mask, cross_mask,
+                     positions, collect_kv=True)
+    k_stack, v_stack = kv
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k_stack = jnp.pad(k_stack, pad)
+        v_stack = jnp.pad(v_stack, pad)
+    logits = L.unembed(params["unembed"]["w"], h[:, -1:, :], cfg)
+    return logits[:, 0], {"k": k_stack, "v": v_stack, "enc_out": enc_out}
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    enc_out = caches["enc_out"]
+    B = x.shape[0]
+    T = enc_out.shape[1]
+    cross_mask = jnp.ones((B, 1, T), bool)
+
+    def body(h, xs):
+        bp, k_c, v_c = xs
+        a, k_c, v_c = L.attention_decode(
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
+            cfg, k_c, v_c, pos)
+        h = h + a
+        h = h + _cross_attention(bp["cross"],
+                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps),
+                                 enc_out, cfg, cross_mask)
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
+                      cfg)
+        return h, (k_c, v_c)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], caches["k"], caches["v"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["unembed"]["w"], h, cfg)
+    return logits[:, 0], {"k": k_new, "v": v_new, "enc_out": enc_out}

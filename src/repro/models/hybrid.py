@@ -1,0 +1,173 @@
+"""zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``cfg.shared_attn_every`` layers (single weight set, re-used at every
+site — the zamba2 parameter-sharing scheme [arXiv:2411.15242]).
+
+Layers are iterated with a Python loop (heterogeneous sites make a uniform
+scan awkward and the model is small); KV caches exist only at the
+``n_sites = ceil(L / every)`` attention sites, which is what makes
+``long_500k`` feasible for this family (28.7 GB of KV at 500k context,
+sharded over the model axis — vs 2.4 TB if every layer carried KV).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def n_sites(cfg: ModelConfig) -> int:
+    return -(-cfg.n_layers // cfg.shared_attn_every)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, ka, km = jax.random.split(key, 4)
+    keys = jax.random.split(kl, cfg.n_layers)
+    blocks = jax.vmap(lambda k: M.init_ssm_block(cfg, k))(keys)
+    shared = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+        "attn": L.init_attention(cfg, ka),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+        "mlp": L.init_mlp(cfg, km),
+    }
+    return {
+        "embed": L.init_embedding(cfg, ke),
+        "blocks": blocks,
+        "shared_attn": shared,
+        "final_norm": L.init_rmsnorm(cfg.d_model,
+                                     L.dtype_of(cfg.param_dtype)),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    stack = jax.tree.map(lambda ax: ("layers",) + ax, M.ssm_block_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embedding_axes(),
+        "blocks": stack,
+        "shared_attn": {
+            "attn_norm": L.rmsnorm_axes(),
+            "attn": L.attention_axes(cfg),
+            "mlp_norm": L.rmsnorm_axes(),
+            "mlp": L.mlp_axes(),
+        },
+        "final_norm": L.rmsnorm_axes(),
+    }
+
+
+def _shared_block(params, x, cfg, mask, positions):
+    sp = params["shared_attn"]
+    a, kv = L.attention(sp["attn"], L.rmsnorm(sp["attn_norm"], x,
+                                              cfg.norm_eps),
+                        cfg, mask, positions)
+    x = x + a
+    x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x, cfg.norm_eps), cfg)
+    return x, kv
+
+
+def _sites(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """(group_start, group_end) per attention site — the mamba layers that
+    follow each shared-attention application."""
+    every = cfg.shared_attn_every
+    return [(s, min(s + every, cfg.n_layers))
+            for s in range(0, cfg.n_layers, every)]
+
+
+def _forward(params, x, cfg: ModelConfig, mask, positions,
+             collect_caches: bool):
+    """Attention sites are inlined (7 for the full config); the mamba layers
+    between sites run under lax.scan on sliced stacked params — keeps the
+    HLO size O(sites), not O(layers), for tractable 256-chip compiles."""
+    ssm_cache_parts, kv_caches = [], []
+    blocks = params["blocks"]
+    for start, end in _sites(cfg):
+        x = L.shard_act(x, "btd")
+        x, kv = _shared_block(params, x, cfg, mask, positions)
+        if collect_caches:
+            kv_caches.append(kv)
+        group = jax.tree.map(lambda a: a[start:end], blocks)
+
+        def body(h, bp):
+            h2, cache = M.ssm_block(bp, L.shard_act(h, "btd"), cfg,
+                                    collect_cache=collect_caches)
+            return h2, cache
+
+        x, caches = jax.lax.scan(body, x, group)
+        if collect_caches:
+            ssm_cache_parts.append(caches)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    caches = None
+    if collect_caches:
+        k_stack = jnp.stack([kv[0] for kv in kv_caches])
+        v_stack = jnp.stack([kv[1] for kv in kv_caches])
+        ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                           *ssm_cache_parts)
+        caches = {"k": k_stack, "v": v_stack, "ssm": ssm}
+    return x, caches
+
+
+def loss(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    mask = L.make_mask("causal", S)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def fwd(p, h):
+        h2, _ = _forward(p, h, cfg, mask, positions, False)
+        return h2
+
+    h = L.remat_wrap(fwd, cfg.remat)(params, x)
+    logits = L.unembed(params["embed"]["table"], h, cfg)
+    logits = L.shard_act(logits, "btv")
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig, pad_to=None):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    B, S, _ = x.shape
+    mask = L.make_mask("causal", S)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, caches = _forward(params, x, cfg, mask, positions, True)
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        caches["k"] = jnp.pad(caches["k"], pad)
+        caches["v"] = jnp.pad(caches["v"], pad)
+    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    x = L.embed(params["embed"], token[:, None], cfg)
+    sp = params["shared_attn"]
+    new_k, new_v, new_ssm_parts = [], [], []
+    for site, (start, end) in enumerate(_sites(cfg)):
+        a, k_c, v_c = L.attention_decode(
+            sp["attn"], L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps),
+            cfg, caches["k"][site], caches["v"][site], pos)
+        x = x + a
+        x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x,
+                                           cfg.norm_eps), cfg)
+        new_k.append(k_c)
+        new_v.append(v_c)
+        group = jax.tree.map(lambda a: a[start:end], params["blocks"])
+        group_cache = jax.tree.map(lambda a: a[start:end], caches["ssm"])
+
+        def body(h, xs):
+            bp, cache = xs
+            h2, c2 = M.ssm_block_decode(bp, h, cfg, cache)
+            return h2, c2
+
+        x, new_cache = jax.lax.scan(body, x, (group, group_cache))
+        new_ssm_parts.append(new_cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"]["table"], x, cfg)
+    new_caches = {
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                            *new_ssm_parts),
+    }
+    return logits[:, 0], new_caches

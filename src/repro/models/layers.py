@@ -1,0 +1,360 @@
+"""Shared layer substrate: norms, RoPE, GQA attention, SwiGLU MLP, embeddings.
+
+Parameters are plain nested dicts of jnp arrays.  Every init_* function has a
+matching *_axes function returning the same pytree structure with logical-axis
+tuples; ``sharding/policies.py`` maps logical axes to mesh axes.
+
+Attention has two implementations selected by ``set_attention_impl``:
+  'xla'              — reference jnp einsum path (default; used for dry-run
+                        lowering and CPU tests)
+  'pallas_interpret' — routes the core softmax(QKᵀ)V through the Pallas
+                        flash-attention kernel in interpret mode (CPU tests)
+On real TPU the 'pallas' value would run the compiled kernel; this container
+is CPU-only so that path is exercised structurally via interpret=True.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_ATTENTION_IMPL = "xla"
+
+
+def set_attention_impl(impl: str) -> None:
+    global _ATTENTION_IMPL
+    assert impl in ("xla", "xla_chunked", "pallas", "pallas_interpret")
+    _ATTENTION_IMPL = impl
+
+
+def get_attention_impl() -> str:
+    return _ATTENTION_IMPL
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (opt-in, set by the launcher)
+#
+# GSPMD's propagation through scanned layer bodies can drift to replicated
+# batch layouts; explicit with_sharding_constraint at block boundaries pins
+# the intended DP×TP activation layout (standard MaxText-style practice).
+# ``_ACT_SPECS`` maps layout kinds → PartitionSpec; None disables (CPU tests).
+# ---------------------------------------------------------------------------
+
+_ACT_SPECS: Optional[dict] = None
+
+
+def set_activation_shardings(specs: Optional[dict]) -> None:
+    """specs: {'btd': PartitionSpec, 'btv': ..., 'btf': ...} or None."""
+    global _ACT_SPECS
+    _ACT_SPECS = specs
+
+
+def shard_act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if _ACT_SPECS is None or kind not in _ACT_SPECS:
+        return x
+    spec = _ACT_SPECS[kind]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_axes() -> dict:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, H, K = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim()
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * scale).astype(dt),
+        "wk": (jax.random.normal(k2, (d, K, hd)) * scale).astype(dt),
+        "wv": (jax.random.normal(k3, (d, K, hd)) * scale).astype(dt),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * (H * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype=dt)
+        p["bk"] = jnp.zeros((K, hd), dtype=dt)
+        p["bv"] = jnp.zeros((K, hd), dtype=dt)
+    return p
+
+
+def attention_axes(cfg: ModelConfig) -> dict:
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = ("kv_heads", "head_dim")
+        p["bv"] = ("kv_heads", "head_dim")
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    cd = dtype_of(cfg.compute_dtype)
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_xla(q, k, v, mask, head_dim: int):
+    """Reference scaled-dot-product attention with GQA head grouping.
+
+    q: (B,S,H,hd), k/v: (B,T,K,hd), mask: (1|B, S, T) boolean (True=attend).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (head_dim ** -0.5)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, mask, head_dim: int, chunk: int = 1024):
+    """Online-softmax (flash) attention in pure JAX: scans KV in chunks with
+    running max/denominator, never materializing the (S, T) score matrix —
+    the XLA-path equivalent of the Pallas flash kernel, used by the dry-run
+    and valid on TPU.  Chunk size mirrors kernel_synth's block choice."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if T % min(chunk, T):
+        return _sdpa_xla(q, k, v, mask, head_dim)
+    c = min(chunk, T)
+    nk = T // c
+    scale = head_dim ** -0.5
+    qg = q.reshape(B, S, K, G, hd)
+    mask_b = jnp.broadcast_to(mask, (mask.shape[0], S, T))
+    k_c = jnp.moveaxis(k.reshape(B, nk, c, K, hd), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(B, nk, c, K, hd), 1, 0)
+    m_c = jnp.moveaxis(mask_b.reshape(mask_b.shape[0], S, nk, c), 2, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, mc = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32)
+        s = s * scale
+        s = jnp.where(mc[:, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mc[:, None, None, :, :], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype),
+                        vc).astype(jnp.float32)
+        acc_new = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k_c, v_c, m_c))
+    denom = jnp.maximum(jnp.moveaxis(l, 3, 1), 1e-30)[..., None]
+    return (acc / denom).astype(q.dtype).reshape(B, S, H, hd)
+
+
+def _sdpa(q, k, v, mask, head_dim: int):
+    if _ATTENTION_IMPL in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.flash_attention_gqa(
+            q, k, v, mask, sm_scale=head_dim ** -0.5,
+            interpret=_ATTENTION_IMPL == "pallas_interpret")
+    if _ATTENTION_IMPL == "xla_chunked":
+        return _sdpa_chunked(q, k, v, mask, head_dim)
+    return _sdpa_xla(q, k, v, mask, head_dim)
+
+
+def attention(params, x, cfg: ModelConfig, mask, positions):
+    """Full-sequence attention (train/prefill).  Returns (out, (k, v))."""
+    hd = cfg.resolved_head_dim()
+    q, k, v = _qkv(params, x, cfg, positions)
+    out = _sdpa(q, k, v, mask, hd)
+    cd = dtype_of(cfg.compute_dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)), (k, v)
+
+
+def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
+    """One-token decode against a static-size KV cache.
+
+    x: (B,1,d); k_cache/v_cache: (B,T,K,hd); pos: () int32 current position.
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    hd = cfg.resolved_head_dim()
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    T = k_cache.shape[1]
+    mask = (jnp.arange(T)[None, None, :] <= pos)  # (1,1,T)
+    out = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                jnp.broadcast_to(mask, (x.shape[0], 1, T)), hd)
+    cd = dtype_of(cfg.compute_dtype)
+    return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)),
+            k_cache, v_cache)
+
+
+def make_mask(kind: str, S: int, T: Optional[int] = None,
+              n_prefix: int = 0) -> jnp.ndarray:
+    """(1, S, T) boolean attention mask."""
+    T = T or S
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    if kind == "causal":
+        m = cols <= rows
+    elif kind == "prefix":  # bidirectional over the first n_prefix tokens
+        m = (cols <= rows) | (cols < n_prefix)
+    elif kind == "full":
+        m = jnp.ones((S, T), dtype=bool)
+    else:
+        raise ValueError(kind)
+    return m[None]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dt),
+        "wi_up": (jax.random.normal(k2, (d, ff)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dt),
+    }
+
+
+def mlp_axes() -> dict:
+    return {"wi_gate": ("embed", "ff"), "wi_up": ("embed", "ff"),
+            "wo": ("ff", "embed")}
+
+
+def mlp(params, x, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    x = x.astype(cd)
+    g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(cd))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      params["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    p = {"table": (jax.random.normal(key, (cfg.vocab, cfg.d_model))
+                   * cfg.d_model ** -0.5).astype(dt)}
+    return p
+
+
+def embedding_axes() -> dict:
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    return params["table"].astype(cd)[tokens]
+
+
+def unembed(table_or_w, x, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(cd),
+                        table_or_w.astype(cd))
+    return logits.astype(dtype_of(cfg.logit_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ignore_id: int = -1) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    w = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)

@@ -1,0 +1,302 @@
+"""Mamba2 / SSD (state-space duality) stack [arXiv:2405.21060].
+
+The SSD layer computes, per head h with state size N and head dim P:
+
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t        (N×P state)
+    y_t = C_t · h_t + D · x_t
+
+Training uses the chunked SSD algorithm: intra-chunk attention-like masked
+matmuls (MXU-friendly — the "duality") + an inter-chunk scan over chunk
+states.  Decoding is the O(1) recurrent step.  The chunk length comes from
+``core.kernel_synth.choose_ssd_blocks`` (interface-aware synthesis); the
+Pallas ``ssd_scan`` kernel implements the same chunk step for TPU.
+
+This family is attention-free: the paper's flash-attention ISAX is
+inapplicable (DESIGN.md §4); the SSD chunk step is the ISAX analogue.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.d_state, s.head_dim
+
+
+def init_ssm_block(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, H, N, P = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    dt = L.dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "in_proj": (jax.random.normal(k1, (d, 2 * d_in + 2 * N + H))
+                    * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch))
+                   * s.conv_width ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dt),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "gate_norm": L.init_rmsnorm(d_in, dt),
+        "out_proj": (jax.random.normal(k3, (d_in, d)) * d_in ** -0.5
+                     ).astype(dt),
+    }
+
+
+def ssm_block_axes(cfg: ModelConfig) -> dict:
+    return {
+        "norm": L.rmsnorm_axes(),
+        "in_proj": ("embed", "ssm_in"),
+        "conv_w": ("conv", "ssm_in"),
+        "conv_b": ("ssm_in",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "gate_norm": {"scale": ("ssm_in",)},
+        "out_proj": ("ssm_in", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: (b,s,H,P), dt: (b,s,H), A: (H,) negative, B/C: (b,s,N).
+
+    Returns y: (b,s,H,P).  Sequences not divisible by `chunk` are padded with
+    dt=0 positions (zero contribution, unit decay) and sliced back.
+    """
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, s)
+    s_orig = s
+    if s % Q:
+        pad = Q - s % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // Q
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+
+    a = dtc * A  # (b,nc,Q,H), negative increments
+    a_cum = jnp.cumsum(a, axis=2)
+
+    # intra-chunk: Y[q] = Σ_{k<=q} (C_q·B_k)·exp(acum_q - acum_k)·dt_k·x_k
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    decay = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])
+    tril = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    M = scores[..., None] * jnp.where(tril, decay, 0.0)  # (b,c,q,k,H)
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # chunk states: S_c = Σ_k exp(acum_last - acum_k)·dt_k·B_k⊗x_k  (b,c,H,N,P)
+    decay_last = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,c,Q,H)
+    states = jnp.einsum("bckh,bckh,bckn,bckhp->bchnp",
+                        decay_last, dtc, Bc, xc)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,c,H)
+
+    def scan_body(h_prev, inp):
+        s_c, dec = inp  # (b,H,N,P), (b,H)
+        h_new = dec[:, :, None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, H, N, P), dtype=x.dtype)
+    _, h_prevs = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (b,c,H,N,P)
+
+    # inter-chunk contribution: Y[q] += (C_q · h_prev) · exp(acum_q)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp",
+                         Cc, h_prevs, jnp.exp(a_cum))
+    return (y_intra + y_inter).reshape(b, s, H, P)[:, :s_orig]
+
+
+def _causal_conv(xBC, w, bias):
+    """Depthwise causal conv1d.  xBC: (b,s,ch), w: (width,ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(width))
+    return out + bias
+
+
+def ssm_block(params, u, cfg: ModelConfig, collect_cache: bool = False):
+    """Full-sequence SSD block.  u: (b,s,d).  Returns (out, cache|None)."""
+    s_cfg = cfg.ssm
+    d_in, H, N, P = _dims(cfg)
+    cd = L.dtype_of(cfg.compute_dtype)
+    x_res = u
+    u = L.rmsnorm(params["norm"], u, cfg.norm_eps).astype(cd)
+    proj = u @ params["in_proj"].astype(cd)  # (b,s,2*d_in+2N+H)
+    z, xBC, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(cd),
+                                   params["conv_b"].astype(cd)))
+    x, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    b, s, _ = x.shape
+    xh = x.reshape(b, s, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                    B.astype(jnp.float32), C.astype(jnp.float32),
+                    s_cfg.chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(cd)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = x_res + (y @ params["out_proj"].astype(cd)).astype(x_res.dtype)
+
+    cache = None
+    if collect_cache:
+        # final recurrent state + pre-conv tail for decode continuation
+        width = s_cfg.conv_width
+        state = _final_state(xh.astype(jnp.float32), dt, A,
+                             B.astype(jnp.float32), s_cfg.chunk)
+        cache = {"conv": proj[:, -(width - 1):, d_in:2 * d_in + 2 * N],
+                 "state": state}
+    return out, cache
+
+
+def _final_state(x, dt, A, B, chunk: int):
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, s)
+    if s % Q:  # dt=0 padding: no contribution, unit decay
+        pad = Q - s % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // Q
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    a_cum = jnp.cumsum(dtc * A, axis=2)
+    decay_last = jnp.exp(a_cum[:, :, -1:, :] - a_cum)
+    states = jnp.einsum("bckh,bckh,bckn,bckhp->bchnp", decay_last, dtc, Bc, xc)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])
+
+    def body(h, inp):
+        s_c, dec = inp
+        return dec[:, :, None, None] * h + s_c, None
+
+    h0 = jnp.zeros((b, H, N, P), dtype=x.dtype)
+    h, _ = jax.lax.scan(body, h0, (states.transpose(1, 0, 2, 3, 4),
+                                   chunk_decay.transpose(1, 0, 2)))
+    return h
+
+
+def ssm_block_decode(params, u, cfg: ModelConfig, cache):
+    """O(1) recurrent step.  u: (b,1,d); cache: {'conv': (b,w-1,ch),
+    'state': (b,H,N,P)}.  Returns (out, new_cache)."""
+    s_cfg = cfg.ssm
+    d_in, H, N, P = _dims(cfg)
+    cd = L.dtype_of(cfg.compute_dtype)
+    x_res = u
+    u = L.rmsnorm(params["norm"], u, cfg.norm_eps).astype(cd)
+    proj = (u @ params["in_proj"].astype(cd))[:, 0]  # (b, 2d_in+2N+H)
+    z, xBC_new, dt_raw = (proj[:, :d_in], proj[:, d_in:2 * d_in + 2 * N],
+                          proj[:, 2 * d_in + 2 * N:])
+    conv_hist = jnp.concatenate(
+        [cache["conv"].astype(cd), xBC_new[:, None, :]], axis=1)  # (b,w,ch)
+    w = params["conv_w"].astype(cd)
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_hist, w)
+                      + params["conv_b"].astype(cd))
+    x, B, C = (xBC[:, :d_in], xBC[:, d_in:d_in + N], xBC[:, d_in + N:])
+    xh = x.reshape(-1, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)  # (b,H)
+    state = cache["state"]
+    state = (decay[:, :, None, None] * state
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, B.astype(jnp.float32), xh))
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_in).astype(cd)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z[:, None, :]),
+                  cfg.norm_eps)
+    out = x_res + (y @ params["out_proj"].astype(cd)).astype(x_res.dtype)
+    return out, {"conv": conv_hist[:, 1:, :].astype(cache["conv"].dtype),
+                 "state": state}
+
+
+# ---------------------------------------------------------------------------
+# Full model (pure SSM stack)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_ssm_block(cfg, k))(keys)
+    return {
+        "embed": L.init_embedding(cfg, ke),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model,
+                                     L.dtype_of(cfg.param_dtype)),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    stack = jax.tree.map(lambda ax: ("layers",) + ax, ssm_block_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": L.embedding_axes(), "blocks": stack,
+            "final_norm": L.rmsnorm_axes()}
+
+
+def loss(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+
+    def body(h, bp):
+        h2, _ = ssm_block(bp, L.shard_act(h, "btd"), cfg)
+        return h2, None
+
+    body = L.remat_wrap(body, cfg.remat)
+    h, _ = jax.lax.scan(body, x, params["blocks"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"]["table"], h, cfg)
+    logits = L.shard_act(logits, "btv")
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig, pad_to=None):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+
+    def body(h, bp):
+        h2, cache = ssm_block(bp, h, cfg, collect_cache=True)
+        return h2, cache
+
+    h, caches = jax.lax.scan(body, x, params["blocks"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    del pos  # SSM decode is position-free (state carries history)
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(h, xs):
+        bp, cache = xs
+        h2, new_cache = ssm_block_decode(bp, h, cfg, cache)
+        return h2, new_cache
+
+    h, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"]["table"], h, cfg)
+    return logits[:, 0], new_caches

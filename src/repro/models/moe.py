@@ -1,0 +1,191 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with sort-based
+capacity dispatch (GShard/Switch style, static shapes — no dynamic slicing,
+compile-friendly at 128 experts).
+
+Supports the two assigned MoE archs:
+  * arctic-480b — 128 experts, top-2, plus a parallel dense residual MLP
+  * dbrx-132b   — 16 experts, top-4
+
+Expert parallelism: the 'experts' logical axis maps to the 'model' mesh axis;
+dispatch/combine become all-to-alls under pjit (inserted by GSPMD from the
+scatter/gather ops when tokens are data-sharded and experts model-sharded).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, m.n_experts
+    dt = L.dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(k1, (d, E)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (E, d, ff)) * d ** -0.5).astype(dt),
+        "wi_up": (jax.random.normal(k3, (E, d, ff)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(k4, (E, ff, d)) * ff ** -0.5).astype(dt),
+    }
+    if m.dense_residual_ff:
+        p["dense"] = L.init_mlp(cfg, k5, d_ff=m.dense_residual_ff)
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    p = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "ff"),
+        "wi_up": ("experts", "embed", "ff"),
+        "wo": ("experts", "ff", "embed"),
+    }
+    if cfg.moe.dense_residual_ff:
+        # arctic's parallel dense residual is small (d_ff 4864); TP-sharding
+        # it costs two full activation all-reduces per layer each way — far
+        # more than its weights are worth.  Replicate over 'model', shard
+        # over 'data' only (§Perf arctic iteration 5).
+        p["dense"] = {"wi_gate": ("embed", None), "wi_up": ("embed", None),
+                      "wo": (None, "embed")}
+    return p
+
+
+def moe_mlp_grouped(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                    group_size: int = 512):
+    """GShard-style grouped one-hot dispatch (the shardable formulation).
+
+    Tokens are split into G groups of ``group_size``; each group routes to a
+    per-group capacity Cg = ⌈k·Tg/E·cf⌉.  Dispatch/combine are einsums with a
+    (G, Tg, E, Cg) one-hot tensor — O(G·Tg²·k·cf) elements, linear in total
+    tokens for fixed Tg — so GSPMD shards everything cleanly: groups follow
+    the data axis, experts the model axis.  This replaces the sort+scatter
+    dispatch whose scatter GSPMD can only implement by replicating the
+    (E, C, d) buffer and all-reducing it (the §Perf arctic pathology).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    cd = L.dtype_of(cfg.compute_dtype)
+    Tg = min(group_size, T)
+    if T % Tg:
+        return moe_mlp(params, x, cfg)  # odd token counts: sort path
+    G = T // Tg
+    xg = x.reshape(G, Tg, d)
+
+    logits = xg.astype(jnp.float32) @ params["router"]        # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                        # (G,Tg,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    if T <= 256:  # small token counts: loss-free (mirrors the sort path)
+        capacity = Tg
+    else:
+        capacity = max(1, int(k * Tg / E * m.capacity_factor))
+    # slot-major positions within each expert (GShard priority order)
+    disp = None
+    comb = None
+    cum = jnp.zeros((G, 1, E), jnp.float32)
+    for s in range(k):
+        oh = jax.nn.one_hot(idx[..., s], E, dtype=jnp.float32)  # (G,Tg,E)
+        pos = jnp.cumsum(oh, axis=1) - oh + cum                 # rank
+        cum = cum + oh.sum(axis=1, keepdims=True)
+        pos_t = jnp.sum(pos * oh, axis=-1)                      # (G,Tg)
+        keep = (pos_t < capacity).astype(jnp.float32)
+        pos_oh = jax.nn.one_hot(pos_t.astype(jnp.int32), capacity,
+                                dtype=jnp.float32)              # (G,Tg,Cg)
+        d_s = oh[..., :, None] * pos_oh[..., None, :] \
+            * keep[..., None, None]                             # (G,Tg,E,Cg)
+        c_s = d_s * gate[..., s][..., None, None]
+        disp = d_s if disp is None else disp + d_s
+        comb = c_s if comb is None else comb + c_s
+    disp = L.shard_act(disp.astype(cd), "gtec")
+    comb = L.shard_act(comb.astype(cd), "gtec")
+
+    buf = jnp.einsum("gtd,gtec->gecd", xg.astype(cd), disp)
+    buf = L.shard_act(buf, "gecd")                              # (G,E,Cg,d)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, params["wi_gate"].astype(cd))
+    u_ = jnp.einsum("gecd,edf->gecf", buf, params["wi_up"].astype(cd))
+    h = jax.nn.silu(g_) * u_
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(cd))
+    out = L.shard_act(out, "gecd")
+    y = jnp.einsum("gecd,gtec->gtd", out, comb).reshape(B, S, d)
+
+    if "dense" in params:
+        y = y + L.mlp(params["dense"], x, cfg)
+    return y.astype(x.dtype), aux
+
+
+def moe_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, d) → (y: (B, S, d), aux_loss: scalar)."""
+    if (getattr(cfg.moe, "dispatch", "sort") == "grouped"
+            and x.shape[0] * x.shape[1] > 1):
+        # grouped dispatch also at decode (T = batch tokens): the sort path's
+        # scatter is as unshardable there as in training (§Perf addendum)
+        return moe_mlp_grouped(params, x, cfg)
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    cd = L.dtype_of(cfg.compute_dtype)
+    xt = x.reshape(T, d)
+
+    # --- routing (fp32) ---
+    logits = xt.astype(jnp.float32) @ params["router"]       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(axis=0)                                   # (E,)
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based capacity dispatch ---
+    # Small token counts (decode steps) get loss-free capacity (= T: no drop
+    # is possible); large token counts use the configured capacity factor.
+    if T <= 256:
+        capacity = T
+    else:
+        capacity = max(1, int(k * T / E * m.capacity_factor))
+    flat_e = idx.reshape(-1)                                  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)                  # (T*k,)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    rank = jnp.arange(T * k, dtype=jnp.int32) - start[sorted_e].astype(jnp.int32)
+    keep = (rank < capacity)
+    dest_p = jnp.minimum(rank, capacity - 1)
+
+    x_sorted = xt[flat_t[order]].astype(cd) * keep[:, None].astype(cd)
+    x_sorted = L.shard_act(x_sorted, "td")
+    buf = jnp.zeros((E, capacity, d), dtype=cd)
+    buf = buf.at[sorted_e, dest_p].add(x_sorted)
+    buf = L.shard_act(buf, "ecd")  # experts→model, capacity→data
+
+    # --- expert SwiGLU (grouped GEMMs over the expert axis) ---
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(cd))
+    out_buf = L.shard_act(out_buf, "ecd")
+
+    # --- combine ---
+    y_sorted = out_buf[sorted_e, dest_p] * keep[:, None].astype(cd)
+    y_sorted = L.shard_act(y_sorted, "td")
+    inv = jnp.argsort(order, stable=True)
+    y_tk = y_sorted[inv].reshape(T, k, d)
+    y = jnp.einsum("tkd,tk->td", y_tk, gate.astype(cd)).reshape(B, S, d)
+
+    if "dense" in params:  # arctic's parallel dense residual branch
+        y = y + L.mlp(params["dense"], x, cfg)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,148 @@
+"""Uniform model API over all architecture families + input_specs.
+
+``get_model(cfg)`` returns a ``Model`` with ``init/loss/prefill/decode_step/
+param_axes``; ``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for every model input of the
+given shape cell — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, mamba2, transformer
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable                 # (params, batch) -> scalar
+    prefill: Callable              # (params, batch, pad_to) -> (logits, caches)
+    decode_step: Callable          # (params, token, caches, pos) -> (logits, caches)
+    param_axes: Callable
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "ssm":
+        mod = mamba2
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(cfg.family)
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        loss=lambda p, b: mod.loss(p, b, cfg),
+        prefill=lambda p, b, pad_to=None: mod.prefill(p, b, cfg,
+                                                      pad_to=pad_to),
+        decode_step=lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg),
+        param_axes=lambda: mod.param_axes(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                with_labels: bool) -> dict:
+    """Specs for a train/prefill batch of this shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    cd = L.dtype_of(cfg.compute_dtype)
+    out = {}
+    if cfg.family == "vlm":
+        P = cfg.n_prefix_tokens
+        out["prefix_embeds"] = _sds((B, P, cfg.d_model), cd)
+        out["tokens"] = _sds((B, S - P), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds((B, S - P), jnp.int32)
+    elif cfg.family == "encdec":
+        out["prefix_embeds"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model), cd)
+        out["tokens"] = _sds((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds((B, S), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32)
+        if with_labels:
+            out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, T: int) -> dict:
+    """Decode-time cache specs (the serve_step state for one new token)."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    Lk = cfg.n_layers
+    hd = cfg.resolved_head_dim() if cfg.n_heads else 0
+    K = cfg.n_kv_heads
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": _sds((Lk, batch, T, K, hd), cd),
+                "v": _sds((Lk, batch, T, K, hd), cd)}
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        ch = d_in + 2 * s.d_state
+        return {"conv": _sds((Lk, batch, s.conv_width - 1, ch), cd),
+                "state": _sds((Lk, batch, H, s.d_state, s.head_dim),
+                              jnp.float32)}
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        ch = d_in + 2 * s.d_state
+        sites = hybrid.n_sites(cfg)
+        return {
+            "k": _sds((sites, batch, T, K, hd), cd),
+            "v": _sds((sites, batch, T, K, hd), cd),
+            "ssm": {"conv": _sds((Lk, batch, s.conv_width - 1, ch), cd),
+                    "state": _sds((Lk, batch, H, s.d_state, s.head_dim),
+                                  jnp.float32)},
+        }
+    if cfg.family == "encdec":
+        return {"k": _sds((Lk, batch, T, K, hd), cd),
+                "v": _sds((Lk, batch, T, K, hd), cd),
+                "enc_out": _sds((batch, cfg.n_prefix_tokens, cfg.d_model),
+                                cd)}
+    raise ValueError(cfg.family)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All inputs for the shape cell's step function.
+
+    train  → {'batch': …}                              (for train_step)
+    prefill→ {'batch': …}                              (for prefill)
+    decode → {'token', 'caches', 'pos'}                (for serve_step)
+    """
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        B = shape.global_batch
+        return {
+            "token": _sds((B,), jnp.int32),
+            "caches": cache_specs(cfg, B, shape.seq_len),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStructs of the parameter tree (eval_shape — no allocation)."""
+    model = get_model(cfg)
+    return jax.eval_shape(model.init, jax.random.key(0))

@@ -1,0 +1,190 @@
+"""Decoder-only transformer covering the dense, moe, and vlm families.
+
+Layers are scan-stacked (params carry a leading 'layers' axis) so HLO size
+and compile time are depth-independent — required for 1000+ chip compiles.
+
+Entry points:
+  init_params / param_axes
+  loss(params, batch)                    — train_4k
+  prefill(params, batch)                 — prefill_32k (returns last logits + caches)
+  decode_step(params, token, caches, pos)— decode_32k / serving
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_axes, moe_mlp
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None
+
+
+def init_block(cfg: ModelConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+        "attn": L.init_attention(cfg, k1),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+    }
+    p["moe" if _is_moe(cfg) else "mlp"] = (
+        init_moe(cfg, k2) if _is_moe(cfg) else L.init_mlp(cfg, k2))
+    return p
+
+
+def block_axes(cfg: ModelConfig) -> dict:
+    p = {
+        "attn_norm": L.rmsnorm_axes(),
+        "attn": L.attention_axes(cfg),
+        "mlp_norm": L.rmsnorm_axes(),
+    }
+    if _is_moe(cfg):
+        p["moe"] = moe_axes(cfg)
+    else:
+        p["mlp"] = L.mlp_axes()
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(cfg, k))(layer_keys)
+    p = {
+        "embed": L.init_embedding(cfg, ke),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model, L.dtype_of(cfg.param_dtype)),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": (jax.random.normal(ku, (cfg.vocab, cfg.d_model))
+                              * cfg.d_model ** -0.5
+                              ).astype(L.dtype_of(cfg.param_dtype))}
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    stack = jax.tree.map(lambda ax: ("layers",) + ax, block_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    p = {
+        "embed": L.embedding_axes(),
+        "blocks": stack,
+        "final_norm": L.rmsnorm_axes(),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": ("vocab", "embed")}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block_fwd(cfg: ModelConfig, x, bp, mask, positions):
+    x = L.shard_act(x, "btd")
+    a, kv = L.attention(bp["attn"], L.rmsnorm(bp["attn_norm"], x, cfg.norm_eps),
+                        cfg, mask, positions)
+    x = x + a
+    if _is_moe(cfg):
+        y, aux = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps),
+                         cfg)
+    else:
+        y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps), cfg)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux, kv
+
+
+def backbone(params, x, cfg: ModelConfig, mask, positions,
+             collect_kv: bool = False):
+    """Scan over stacked blocks.  Returns (hidden, aux, kv_stack|None)."""
+
+    def body(carry, bp):
+        h, aux = carry
+        h2, a, kv = _block_fwd(cfg, h, bp, mask, positions)
+        ys = kv if collect_kv else None
+        return (h2, aux + a), ys
+
+    body = L.remat_wrap(body, cfg.remat)
+    (h, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                params["blocks"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux, ys
+
+
+def _unembed_table(params, cfg: ModelConfig):
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["unembed"]["w"])
+
+
+def _inputs_to_x(params, batch, cfg: ModelConfig):
+    """tokens (+ optional prefix_embeds for vlm/stub frontends) → (x, S)."""
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.n_prefix_tokens and "prefix_embeds" in batch:
+        pe = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def loss(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    """batch: tokens (B, S_text), labels (B, S_text) [, prefix_embeds]."""
+    x = _inputs_to_x(params, batch, cfg)
+    B, S, _ = x.shape
+    mask_kind = "prefix" if cfg.family == "vlm" else "causal"
+    mask = L.make_mask(mask_kind, S, n_prefix=cfg.n_prefix_tokens
+                       if cfg.family == "vlm" else 0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, aux, _ = backbone(params, x, cfg, mask, positions)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    logits = L.shard_act(logits, "btv")
+    n_pref = x.shape[1] - batch["tokens"].shape[1]
+    logits = logits[:, n_pref:, :]
+    return L.cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+
+def prefill(params, batch, cfg: ModelConfig, pad_to: Optional[int] = None):
+    """Returns (last-position logits, kv caches stacked over layers, length)."""
+    x = _inputs_to_x(params, batch, cfg)
+    B, S, _ = x.shape
+    mask_kind = "prefix" if cfg.family == "vlm" else "causal"
+    mask = L.make_mask(mask_kind, S, n_prefix=cfg.n_prefix_tokens
+                       if cfg.family == "vlm" else 0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True)
+    k_stack, v_stack = kv  # (L, B, S, K, hd)
+    if pad_to and pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k_stack = jnp.pad(k_stack, pad)
+        v_stack = jnp.pad(v_stack, pad)
+    logits = L.unembed(_unembed_table(params, cfg), h[:, -1:, :], cfg)
+    return logits[:, 0], {"k": k_stack, "v": v_stack}
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig):
+    """One-token decode.  token: (B,) int32; caches: {'k','v'} (L,B,T,K,hd);
+    pos: () int32.  Returns (logits (B, vocab), new caches)."""
+    x = L.embed(params["embed"], token[:, None], cfg)  # (B,1,d)
+
+    def body(h, xs):
+        bp, k_c, v_c = xs
+        a, k_c, v_c = L.attention_decode(
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
+            cfg, k_c, v_c, pos)
+        h = h + a
+        if _is_moe(cfg):
+            y, _ = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], h,
+                                                cfg.norm_eps), cfg)
+        else:
+            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
+                      cfg)
+        return h + y, (k_c, v_c)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], caches["k"], caches["v"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    return logits[:, 0], {"k": k_new, "v": v_new}

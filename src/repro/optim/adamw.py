@@ -1,0 +1,105 @@
+"""AdamW with global-norm clipping and optional int8 error-feedback gradient
+compression (the distributed-optimization trick: 4× less gradient traffic on
+the DP reduction path, with the quantization error carried forward so the
+update is unbiased in the long run).
+
+State dtypes are configurable so the 480B MoE fits (bf16 moments)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # 'bfloat16' for the big MoEs
+    compress_grads: bool = False      # int8 error-feedback compression
+
+
+def init_state(params, cfg: AdamWConfig):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(zeros, params)
+    return state
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_int8(g, err):
+    """Error-feedback int8 quantization: returns (dequantized g, new err).
+
+    q = round(clip((g + err)/s)) with per-tensor scale s; the residual
+    (g + err − deq(q)) feeds back into the next step.  On hardware the int8
+    payload is what crosses the DP all-reduce (4× traffic cut); here the
+    dequantized value continues through the update so numerics are identical
+    to the wire version.
+    """
+    gf = g.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, (gf - deq).astype(err.dtype)
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jnp.ndarray | float = 1.0):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    new_err = state.get("err")
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, state["err"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state, {"grad_norm": gnorm}

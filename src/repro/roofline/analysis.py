@@ -1,0 +1,169 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_wire_bytes_per_chip / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are not
+in cost_analysis, so ``parse_collectives`` walks the optimized HLO text and
+sums per-op wire bytes with ring-algorithm factors:
+
+    all-reduce      2·S·(G−1)/G        (S = tensor bytes, G = group size)
+    all-gather      R·(G−1)/G          (R = result bytes)
+    reduce-scatter  R·(G−1)            (result is the scattered shard)
+    all-to-all      R·(G−1)/G
+    collective-permute  R
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str, opname: str) -> int:
+    """Sum the shapes on the lhs (before the op name)."""
+    head = line.split(opname, 1)[0]
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    wire_bytes_per_chip: float
+    in_loop_counts: dict | None = None
+
+    def total_result_bytes(self) -> float:
+        return sum(self.result_bytes.values())
+
+
+def _computation_header(stripped: str) -> str | None:
+    """HLO computation headers look like
+    ``[ENTRY ]%name.123 (p: f32[..], ...) -> ret { ``; nested parens in the
+    parameter list make a strict regex unreliable — match structurally."""
+    if not stripped.endswith("{") or "->" not in stripped:
+        return None
+    tok = stripped.split()[0]
+    if tok == "ENTRY":
+        return "ENTRY"
+    return tok.lstrip("%")
+
+
+def parse_collectives(hlo_text: str, n_chips: int,
+                      loop_trip: int = 1) -> CollectiveStats:
+    """Sum per-op wire bytes.  Ops inside while-loop body computations are
+    weighted by ``loop_trip`` (the layer-scan trip count): HLO text lists a
+    scan-body collective once, but it executes once per layer."""
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    in_loop = {k: 0 for k in COLLECTIVE_OPS}
+    rbytes = {k: 0.0 for k in COLLECTIVE_OPS}
+    wire = 0.0
+    cur_comp = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        header = _computation_header(stripped)
+        if header is not None:
+            cur_comp = header
+            continue
+        if stripped == "}":
+            continue
+        for op in COLLECTIVE_OPS:
+            token = f" {op}("
+            if token not in stripped:
+                continue
+            r = _result_bytes(stripped, token)
+            if r == 0:
+                continue
+            g = _group_size(stripped, n_chips)
+            # JAX scan/while bodies lower to computations named
+            # region_N[.M][_spmd][.clone]* (wide.* when batched); reduction
+            # regions are also "region" but never contain collectives.
+            looped = ("body" in cur_comp or "while" in cur_comp
+                      or "scan" in cur_comp or "region" in cur_comp)
+            mult = loop_trip if looped else 1
+            counts[op] += 1
+            in_loop[op] += int(looped)
+            rbytes[op] += r * mult
+            if op == "all-reduce":
+                wire += 2 * r * (g - 1) / max(g, 1) * mult
+            elif op == "all-gather":
+                wire += r * (g - 1) / max(g, 1) * mult
+            elif op == "reduce-scatter":
+                wire += r * (g - 1) * mult
+            elif op == "all-to-all":
+                wire += r * (g - 1) / max(g, 1) * mult
+            else:  # collective-permute
+                wire += r * mult
+            break
+    return CollectiveStats(counts, rbytes, wire, in_loop)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(flops: float, hbm_bytes: float, wire_bytes_per_chip: float,
+             n_chips: int, model_flops: float = 0.0) -> Roofline:
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (n_chips * HBM_BW)
+    collective_s = wire_bytes_per_chip / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / flops if flops else 0.0
+    return Roofline(flops, hbm_bytes, wire_bytes_per_chip, n_chips,
+                    compute_s, memory_s, collective_s, bottleneck,
+                    model_flops, useful)

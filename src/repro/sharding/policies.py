@@ -1,0 +1,255 @@
+"""Sharding policies: logical parameter/activation axes → mesh axes.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+
+Policy 'fsdp_tp' (default):
+  * every ≥1-D weight is sharded over 'data' on its 'embed' axis (ZeRO-3
+    style full parameter+optimizer sharding),
+  * 'heads'/'ff'/'experts'/'vocab'/'ssm_in' shard over 'model' (TP/EP),
+  * axes that don't divide the mesh axis fall back to replication
+    (e.g. granite's vocab 49155 is odd → vocab unsharded).
+
+Activations: batch over ('pod','data') (pure DP across pods), model-parallel
+dims over 'model'; decode KV caches shard batch over data and kv-heads (or
+head_dim, or sequence for batch-1 long-context) over 'model'.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# priority lists per logical axis: first mesh axis that divides wins
+PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "layers": (),
+    "vocab": ("model",),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),          # fallback TP axis for GQA handled in resolve()
+    "ff": ("model",),
+    "experts": ("model",),
+    "ssm_in": ("model",),
+    "ssm_heads": ("model",),
+    "conv": (),
+    "state": (),
+}
+
+# Policy presets (hillclimb variants — §Perf in EXPERIMENTS.md):
+#   fsdp_tp  — ZeRO-3 over 'data' + TP/EP over 'model' (baseline)
+#   dp_only  — params replicated, batch over BOTH axes (pure 256-way DP;
+#              wins for small models where TP+FSDP collectives dominate)
+#   fsdp_2d  — params sharded over both axes on the same dim where possible
+POLICIES: dict[str, dict[str, tuple[str, ...]]] = {
+    "fsdp_tp": PARAM_RULES,
+    "fsdp_tp_hd": PARAM_RULES,   # + GQA head_dim TP fallback (see below)
+    "dp_only": {ax: () for ax in PARAM_RULES},
+    "fsdp_2d": {**PARAM_RULES, "embed": (("data", "model"), "data")},
+    # Serving: no optimizer state, tiny activations — shard weight
+    # CONTRACTION dims 2-D (embed→model, ff→data, experts→model) so decode
+    # pays small activation all-reduces instead of full FSDP weight gathers
+    # (arctic decode: 3×1.1 GB f32 gathers/layer → §Perf addendum).
+    "serve": {
+        "layers": (), "vocab": ("model",), "embed": ("model", "data"),
+        "heads": (), "kv_heads": (), "head_dim": (), "ff": ("data",),
+        "experts": ("model",), "ssm_in": ("model",), "ssm_heads": ("model",),
+        "conv": (), "state": (),
+    },
+}
+
+# batch/activation DP axes per policy (model axis joins DP for dp_only)
+POLICY_DP: dict[str, tuple[str, ...]] = {
+    "fsdp_tp": ("data",),
+    "fsdp_tp_hd": ("data",),
+    "dp_only": ("data", "model"),
+    "fsdp_2d": ("data",),
+    "serve": ("data",),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _fits(mesh: Mesh, dim: int, mesh_axis) -> bool:
+    if isinstance(mesh_axis, tuple):
+        size = 1
+        for a in mesh_axis:
+            if a not in mesh.axis_names:
+                return False
+            size *= _axis_size(mesh, a)
+        return dim % size == 0
+    return (mesh_axis in mesh.axis_names
+            and dim % _axis_size(mesh, mesh_axis) == 0)
+
+
+def resolve_param_spec(axes: tuple, shape: tuple, mesh: Mesh,
+                       policy: str = "fsdp_tp") -> P:
+    """Map one parameter's logical axes to a PartitionSpec.
+
+    Embedding/unembedding tables are vocab-parallel only (Megatron style):
+    sharding their d_model axis over 'data' makes the unembed contraction
+    dim and the batch dim compete for the same mesh axis, which GSPMD
+    resolves by replicating the batch and all-gathering full logits."""
+    rules = POLICIES[policy]
+    spec: list = []
+    used: set = set()
+    vocab_table = "vocab" in axes
+    for ax_name, dim in zip(axes, shape):
+        if vocab_table and ax_name == "embed":
+            spec.append(None)
+            continue
+        chosen = None
+        for mesh_axis in rules.get(ax_name, ()):
+            names = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            if (_fits(mesh, dim, mesh_axis)
+                    and not (set(names) & used)):
+                chosen = mesh_axis
+                break
+        spec.append(chosen)
+        if chosen:
+            used.update(chosen if isinstance(chosen, tuple) else (chosen,))
+    # GQA head_dim TP fallback — OPT-IN ONLY ('fsdp_tp_hd').  Sharding
+    # head_dim puts the QKᵀ contraction dim on 'model', turning every
+    # attention score tensor into a partial-sum all-reduce of the full
+    # (…, S, T) matrix (measured: 3×60 GB per layer on arctic-480b train_4k
+    # — see EXPERIMENTS.md §Perf iteration 2).  Replicating attention over
+    # 'model' is strictly cheaper when neither heads nor kv_heads divide.
+    if (policy == "fsdp_tp_hd" and "kv_heads" in axes
+            and "model" not in used and "head_dim" in axes):
+        i = axes.index("head_dim")
+        if shape[i] % _axis_size(mesh, "model") == 0:
+            spec[i] = "model"
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, axes_tree, params_tree,
+                    policy: str = "fsdp_tp"):
+    """Pytree of NamedShardings matching params (axes_tree mirrors shapes)."""
+    def one(axes, leaf):
+        return NamedSharding(mesh, resolve_param_spec(axes, leaf.shape, mesh,
+                                                      policy))
+    return jax.tree.map(one, axes_tree, params_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def dp_axes(mesh: Mesh, policy: str = "fsdp_tp") -> tuple[str, ...]:
+    base = POLICY_DP.get(policy, ("data",))
+    return (("pod",) + base) if "pod" in mesh.axis_names else base
+
+
+def _div(dim: int, mesh: Mesh, axes: tuple[str, ...]) -> Optional[tuple]:
+    size = 1
+    for a in axes:
+        size *= _axis_size(mesh, a)
+    return axes if dim % size == 0 else None
+
+
+def batch_sharding(cfg: ModelConfig, mesh: Mesh, batch_specs: dict,
+                   policy: str = "fsdp_tp") -> dict:
+    """Shardings for a train/prefill batch dict."""
+    dp = dp_axes(mesh, policy)
+    out = {}
+    for k, sds in batch_specs.items():
+        b = sds.shape[0]
+        dpa = _div(b, mesh, dp) or _div(b, mesh, ("data",))
+        lead = dpa if dpa else None
+        rest = (None,) * (len(sds.shape) - 1)
+        out[k] = NamedSharding(mesh, P(lead, *rest))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_specs,
+                    seq_axis_ok: bool = True, policy: str = "fsdp_tp"):
+    """Decode-cache shardings.  KV caches (L,B,T,K,hd): batch→data,
+    kv-heads→model (or head_dim, or — batch==1 long-context — T→data and
+    heads→model).  SSM states (L,B,H,N,P): batch→data, H→model."""
+    dp = dp_axes(mesh)
+
+    def one(path_hint, sds):
+        shp = sds.shape
+        if path_hint in ("k", "v"):  # (L|sites, B, T, K, hd) KV cache
+            _, b, t, k, hd = shp
+            dpa = _div(b, mesh, dp) or _div(b, mesh, ("data",))
+            kv_ax = "model" if k % _axis_size(mesh, "model") == 0 else None
+            # When kv heads don't divide the model axis, shard the SEQUENCE
+            # over 'model' (sequence-parallel KV): attention over the sharded
+            # T reduces with tiny (B,H,1) max/sum collectives.  Never shard
+            # head_dim — that makes every score tensor a partial-sum
+            # all-reduce (§Perf granite-decode iteration 1).
+            t_ax = None
+            if kv_ax is None and t % _axis_size(mesh, "model") == 0:
+                t_ax = "model"
+            elif (dpa is None and seq_axis_ok
+                  and t % _axis_size(mesh, "data") == 0):
+                t_ax = "data"  # batch-1 long context: SP over data instead
+            return NamedSharding(mesh, P(None, dpa, t_ax, kv_ax, None))
+        if path_hint == "state":  # (L,B,H,N,P) SSM state
+            _, b, h, n, p = shp
+            dpa = _div(b, mesh, dp) or _div(b, mesh, ("data",))
+            h_ax = "model" if h % _axis_size(mesh, "model") == 0 else None
+            return NamedSharding(mesh, P(None, dpa, h_ax, None, None))
+        if path_hint == "conv":  # (L,B,w-1,ch)
+            _, b, _, ch = shp
+            dpa = _div(b, mesh, dp) or _div(b, mesh, ("data",))
+            ch_ax = "model" if ch % _axis_size(mesh, "model") == 0 else None
+            return NamedSharding(mesh, P(None, dpa, None, ch_ax))
+        if path_hint == "enc_out":  # (B, T, d)
+            dpa = _div(shp[0], mesh, dp) or _div(shp[0], mesh, ("data",))
+            return NamedSharding(mesh, P(dpa, None, None))
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    def walk(tree, hint=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return one(hint, tree)
+
+    return walk(cache_specs)
+
+
+def activation_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                     policy: str = "fsdp_tp") -> dict:
+    """PartitionSpecs for block-boundary activation constraints.
+
+    'btd' — (batch, seq, d_model): batch over DP axes.
+    'btv' — logits (batch, seq, vocab): batch over DP, vocab over model if
+            divisible.
+    Falls back to None entries when the batch doesn't divide DP (batch-1
+    long-context decode)."""
+    dp = dp_axes(mesh, policy)
+    dpa = _div(global_batch, mesh, dp) or _div(global_batch, mesh, ("data",))
+    v_ax = ("model" if cfg.vocab % _axis_size(mesh, "model") == 0
+            and "model" not in (dpa or ()) else None)
+    moe = {}
+    if cfg.moe is not None:
+        e_ax = ("model" if cfg.moe.n_experts % _axis_size(mesh, "model") == 0
+                else None)
+        # capacity/token dims shard over 'data' only (sizes are derived from
+        # the token count, divisible by the data axis but not necessarily by
+        # pod×data)
+        moe = {"ecd": P(e_ax, "data", None), "td": P("data", None),
+               # grouped (GShard) dispatch: groups follow data, experts model
+               "gtec": P("data", None, e_ax, None),
+               "gecd": P("data", e_ax, None, None)}
+    if dpa is None:
+        return {"btd": None,
+                "btv": P(None, None, v_ax) if v_ax else None, **moe}
+    return {
+        "btd": P(dpa, None, None),
+        "btv": P(dpa, None, v_ax),
+        **moe,
+    }
+
+
+def ssm_state_sharding(mesh: Mesh, sds) -> NamedSharding:
+    """(L,B,H,N,P): batch→data, heads→model."""
+    dp = dp_axes(mesh)
+    _, b, h, n, p = sds.shape
+    dpa = _div(b, mesh, dp) or _div(b, mesh, ("data",))
+    h_ax = "model" if h % _axis_size(mesh, "model") == 0 else None
+    return NamedSharding(mesh, P(None, dpa, h_ax, None, None))

@@ -1,0 +1,175 @@
+"""Trainer: jit'd train step (loss → grads → AdamW), sharded params, gradient
+accumulation, checkpointing with auto-resume, straggler monitoring.
+
+Designed so the same code path runs (a) single-CPU smoke tests, (b) the
+multi-pod dry-run (via launch/dryrun.py which reuses ``make_train_step``),
+and (c) a real cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.registry import Model, get_model
+from repro.optim import schedule as schedules
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import FailureInjector, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    batch: int = 8
+    seq: int = 128
+    microbatches: int = 1          # gradient accumulation factor
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    async_ckpt: bool = False       # overlap checkpoint I/O with training
+    log_every: int = 10
+    seed: int = 0
+    warmup: int = 20
+    total_steps: int = 1000
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, train_cfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With microbatches > 1 the batch leading dim is (n_micro, micro_bsz, ...)
+    and gradients accumulate in a lax.scan (bounded live memory)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            def acc(carry, micro):
+                loss_sum, g_sum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, micro)
+                return (loss_sum + loss,
+                        jax.tree.map(jnp.add, g_sum, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, g_sum), _ = jax.lax.scan(
+                acc, (jnp.zeros(()), zeros), batch)
+            n = train_cfg.microbatches
+            loss = loss_sum / n
+            grads = jax.tree.map(lambda g: g / n, g_sum)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr_scale = schedules.warmup_cosine(
+            opt_state["step"], warmup=train_cfg.warmup,
+            total=train_cfg.total_steps)
+        params, opt_state, m = apply_updates(params, grads, opt_state,
+                                             opt_cfg, lr_scale)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 pipeline_cfg: PipelineConfig = PipelineConfig(),
+                 failure_injector: Optional[FailureInjector] = None):
+        self.model_cfg = model_cfg
+        self.cfg = train_cfg
+        self.model = get_model(model_cfg)
+        self.pipeline = TokenPipeline(model_cfg, train_cfg.batch,
+                                      train_cfg.seq, pipeline_cfg)
+        self.monitor = StragglerMonitor()
+        self.injector = failure_injector
+        self.step = 0
+        self.metrics_log: list[dict] = []
+
+        params = self.model.init(jax.random.key(train_cfg.seed))
+        opt_state = init_state(params, train_cfg.optimizer)
+        # auto-resume from the newest valid checkpoint
+        if train_cfg.ckpt_dir and ckpt.latest_step(train_cfg.ckpt_dir) is not None:
+            tree, manifest = ckpt.load(train_cfg.ckpt_dir)
+            params = jax.tree.map(
+                lambda ref, x: jnp.asarray(x, ref.dtype), params,
+                tree["params"])
+            opt_state = jax.tree.map(
+                lambda ref, x: jnp.asarray(x, ref.dtype), opt_state,
+                tree["opt_state"])
+            self.step = manifest["step"]
+        self.params = params
+        self.opt_state = opt_state
+        self._step_fn = jax.jit(
+            make_train_step(self.model, train_cfg.optimizer, train_cfg),
+            donate_argnums=(0, 1))
+        self._ckpt_thread = None
+
+    def _device_batch(self, step: int) -> dict:
+        b = self.pipeline.get_batch(step)
+        if self.cfg.microbatches > 1:
+            n = self.cfg.microbatches
+            b = {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+                 for k, v in b.items()}
+        return jax.tree.map(jnp.asarray, b)
+
+    def train(self, total_steps: int) -> dict:
+        last = {}
+        while self.step < total_steps:
+            t0 = time.perf_counter()
+            step = self.step
+            if self.injector:
+                self.injector.maybe_fail(step)
+            batch = self._device_batch(step)
+            self.params, self.opt_state, m = self._step_fn(
+                self.params, self.opt_state, batch)
+            m = {k: float(v) for k, v in m.items()}
+            self.step = step + 1
+            dt = time.perf_counter() - t0
+            ev = self.monitor.record(step, dt)
+            m["step_time"] = dt
+            if ev is not None:
+                m["straggler_z"] = ev.z
+            self.metrics_log.append({"step": step, **m})
+            last = m
+            if (self.cfg.ckpt_dir
+                    and self.step % self.cfg.ckpt_every == 0):
+                self.save_checkpoint()
+        if self.cfg.ckpt_dir:
+            self.save_checkpoint()
+            self.wait_for_checkpoint()
+        return last
+
+    def save_checkpoint(self) -> None:
+        """Checkpoint the current state.  With ``async_ckpt`` the device→host
+        snapshot happens synchronously (cheap) and the file write runs on a
+        background thread, overlapping the next training steps; the previous
+        write is joined first so at most one write is in flight."""
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        extra = {"model": self.model_cfg.name}
+        step = self.step
+        if not self.cfg.async_ckpt:
+            ckpt.save(self.cfg.ckpt_dir, step, tree, extra=extra)
+            ckpt.gc(self.cfg.ckpt_dir, keep=self.cfg.keep_ckpts)
+            return
+        import threading
+        self.wait_for_checkpoint()
+        snapshot = jax.device_get(tree)  # consistent copy before donation
+
+        def write():
+            ckpt.save(self.cfg.ckpt_dir, step, snapshot, extra=extra)
+            ckpt.gc(self.cfg.ckpt_dir, keep=self.cfg.keep_ckpts)
+
+        self._ckpt_thread = threading.Thread(target=write, daemon=True)
+        self._ckpt_thread.start()
+
+    def wait_for_checkpoint(self) -> None:
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+            self._ckpt_thread = None

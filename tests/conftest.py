@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ layout import path (so plain `pytest tests/` works too)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests must see
+# the real single CPU device; only launch/dryrun.py forces 512.

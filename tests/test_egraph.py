@@ -1,0 +1,153 @@
+"""E-graph engine invariants (paper §2.3/§5.2) — unit + hypothesis property."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expr
+from repro.core.egraph import EGraph, Rewrite, run_rewrites
+from repro.core.expr import const, var
+from repro.core.offload import evaluate
+from repro.core.rewrites import internal_rules, saturate_internal
+
+
+class TestEGraphBasics:
+    def test_hashcons_dedup(self):
+        eg = EGraph()
+        a = eg.add_term(("+", var("x"), const(1)))
+        b = eg.add_term(("+", var("x"), const(1)))
+        assert eg.find(a) == eg.find(b)
+
+    def test_union_find(self):
+        eg = EGraph()
+        a = eg.add_term(var("a"))
+        b = eg.add_term(var("b"))
+        c = eg.add_term(var("c"))
+        eg.union(a, b)
+        eg.union(b, c)
+        assert eg.find(a) == eg.find(c)
+
+    def test_congruence_closure(self):
+        eg = EGraph()
+        fa = eg.add_term(("exp", var("a")))
+        fb = eg.add_term(("exp", var("b")))
+        assert eg.find(fa) != eg.find(fb)
+        eg.union(eg.add_term(var("a")), eg.add_term(var("b")))
+        eg.rebuild()
+        assert eg.find(fa) == eg.find(fb)
+
+    def test_congruence_two_levels(self):
+        eg = EGraph()
+        ffa = eg.add_term(("exp", ("neg", var("a"))))
+        ffb = eg.add_term(("exp", ("neg", var("b"))))
+        eg.union(eg.add_term(var("a")), eg.add_term(var("b")))
+        eg.rebuild()
+        assert eg.find(ffa) == eg.find(ffb)
+
+    def test_ematch_binds_consistently(self):
+        eg = EGraph()
+        eg.add_term(("+", var("x"), var("x")))
+        eg.add_term(("+", var("x"), var("y")))
+        same = eg.ematch(("+", ("?a",), ("?a",)))
+        assert len(same) == 1
+
+    def test_extraction_minimizes(self):
+        eg = EGraph()
+        expensive = eg.add_term(("<<", var("i"), const(2)))
+        cheap = eg.add_term(("*", var("i"), const(4)))
+        eg.union(expensive, cheap)
+        eg.rebuild()
+        cost = lambda op, cc: (50.0 if op == "<<" else 1.0) + sum(cc)
+        out = eg.extract(eg.find(expensive), cost)
+        assert expr.op(out) == "*"
+
+    def test_rewrite_nondestructive(self):
+        """Union keeps both variants available (the e-graph accumulates)."""
+        eg = EGraph()
+        root = eg.add_term(("<<", var("i"), const(2)))
+        run_rewrites(eg, internal_rules(), max_iters=3)
+        nodes = {n[0] for n in eg.nodes_of(root)}
+        assert "<<" in nodes and "*" in nodes
+
+
+# --- hypothesis: semantic preservation under saturation ---------------------
+
+_leaf = st.sampled_from([var("x"), var("y"), const(2), const(3), const(5)])
+
+
+def _terms(depth):
+    if depth == 0:
+        return _leaf
+    sub = _terms(depth - 1)
+    return st.one_of(
+        _leaf,
+        st.tuples(st.sampled_from(["+", "*", "-"]), sub, sub).map(tuple),
+        st.tuples(st.just("<<"), sub, st.sampled_from([const(1), const(2)])
+                  ).map(tuple),
+    )
+
+
+@given(_terms(3), st.integers(-3, 3), st.integers(-3, 3))
+@settings(max_examples=60, deadline=None)
+def test_saturation_preserves_semantics(term, xv, yv):
+    """Any extraction from the saturated e-graph evaluates identically."""
+    env = {"x": np.int64(xv), "y": np.int64(yv)}
+    try:
+        want = evaluate(term, dict(env))
+    except Exception:
+        return  # skip invalid shifts etc.
+    eg = EGraph(node_limit=20_000)
+    root = eg.add_term(term)
+    saturate_internal(eg, max_iters=3)
+    cost = lambda op, cc: 1.0 + sum(cc)
+    got_term = eg.extract(eg.find(root), cost)
+    got = evaluate(got_term, dict(env))
+    assert np.allclose(np.float64(want), np.float64(got)), (term, got_term)
+
+
+@given(_terms(2))
+@settings(max_examples=40, deadline=None)
+def test_add_term_idempotent(term):
+    eg = EGraph()
+    a = eg.add_term(term)
+    b = eg.add_term(term)
+    assert eg.find(a) == eg.find(b)
+    n = eg.n_nodes()
+    eg.add_term(term)
+    assert eg.n_nodes() == n
+
+
+@given(_terms(2), _terms(2))
+@settings(max_examples=30, deadline=None)
+def test_union_symmetric_idempotent(t1, t2):
+    eg1 = EGraph()
+    a1, b1 = eg1.add_term(t1), eg1.add_term(t2)
+    eg1.union(a1, b1)
+    eg1.rebuild()
+    eg2 = EGraph()
+    a2, b2 = eg2.add_term(t1), eg2.add_term(t2)
+    eg2.union(b2, a2)
+    eg2.union(a2, b2)
+    eg2.rebuild()
+    assert (eg1.find(a1) == eg1.find(b1)) == (eg2.find(a2) == eg2.find(b2))
+    assert eg1.n_classes() == eg2.n_classes()
+
+
+def test_normalize_indices_idempotent_and_alpha():
+    t = expr.for_("k", const(0), const(8), const(1),
+                  ("store", ("arr:A",), var("k"),
+                   ("+", var("k"), var("free"))))
+    n1 = expr.normalize_indices(t)
+    n2 = expr.normalize_indices(n1)
+    assert n1 == n2
+    assert expr.op(n1) == "for:i0"
+    # free vars survive; bound var renamed
+    leaves = {expr.op(u) for u in expr.walk(n1) if expr.is_leaf(u)}
+    assert "var:free" in leaves and "var:i0" in leaves and "var:k" not in leaves
+
+
+def test_loop_structure_summary():
+    t = expr.for_("i", const(0), const(8), const(2),
+                  expr.for_("j", const(0), const(4), const(1),
+                            ("store", ("arr:A",), var("j"), var("j"))))
+    s = expr.loop_structure(t)
+    assert s == (4, 2, ((4, 1, ()),))

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced configs of the same family) plus
+model-level correctness: SSD math, prefill→decode continuity, MoE routing,
+param-axes tree consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, applicable_shapes, reduced
+from repro.configs.registry import ASSIGNED_ARCHS, all_configs, get_config
+from repro.models.registry import get_model, input_specs, param_specs
+
+ARCHS = list(all_configs().keys())
+
+
+def _batch_for(cfg, B=2, S=16, with_labels=True, key=0):
+    rng = jax.random.key(key)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    out = {"tokens": toks}
+    if with_labels:
+        out["labels"] = toks
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = jnp.ones((B, cfg.n_prefix_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        out["prefix_embeds"] = jnp.ones((B, 8, cfg.d_model))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_train_step(arch):
+    """Reduced config: one forward + one train step, finite outputs."""
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(cfg)
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(model.loss)(params, batch)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, with_labels=False)
+    npref = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+    logits, caches = model.prefill(params, batch, S + npref + 4)
+    assert logits.shape == (B, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    lg, caches2 = model.decode_step(params, tok, caches,
+                                    jnp.int32(S + npref))
+    assert lg.shape == (B, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen1.5-0.5b",
+                                  "mamba2-2.7b", "zamba2-1.2b",
+                                  "paligemma-3b", "dbrx-132b",
+                                  "seamless-m4t-medium"])
+def test_decode_matches_prefill(arch):
+    """decode_step(t|prefix) must equal prefill(prefix+t) logits."""
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.key(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(2), (B, S + 1), 0, cfg.vocab)
+    npref = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+    batch = _batch_for(cfg, B, S, with_labels=False, key=3)
+    batch["tokens"] = toks[:, :S]
+    _, caches = model.prefill(params, batch, S + npref + 4)
+    lg, _ = model.decode_step(params, toks[:, S], caches,
+                              jnp.int32(S + npref))
+    batch2 = dict(batch, tokens=toks[:, :S + 1])
+    lg_want, _ = model.prefill(params, batch2, S + npref + 4)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_want),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_ssd_chunked_equals_naive():
+    from repro.models.mamba2 import ssd_chunked
+    rng = np.random.default_rng(0)
+    b, s, H, P, N = 2, 48, 3, 4, 5  # 48 not divisible by chunk 16 → padding
+    x = jnp.asarray(rng.normal(size=(b, s, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, size=(b, s, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 1.5, size=(H,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, N)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, N)), jnp.float32)
+    y = ssd_chunked(x, dt, A, B, C, chunk=16)
+    h = np.zeros((b, H, N, P))
+    ys = []
+    for t in range(s):
+        dec = np.exp(np.asarray(dt[:, t]) * np.asarray(A))
+        h = dec[:, :, None, None] * h + np.einsum(
+            "bh,bn,bhp->bhnp", np.asarray(dt[:, t]), np.asarray(B[:, t]),
+            np.asarray(x[:, t]))
+        ys.append(np.einsum("bn,bhnp->bhp", np.asarray(C[:, t]), h))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-4)
+
+
+def test_moe_routing_capacity_and_balance():
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import init_moe, moe_mlp
+    import dataclasses
+    cfg = reduced(get_config("dbrx-132b"))
+    params = init_moe(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+    y, aux = moe_mlp(params, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(aux)) and float(aux) > 0
+    # loss-free small-T capacity: all tokens routed (no silent drops)
+    y2, _ = moe_mlp(params, x * 2, cfg)
+    assert not bool(jnp.allclose(y, y2))
+
+
+def test_param_axes_tree_matches_params():
+    """The logical-axes tree must mirror the param tree leaf-for-leaf with
+    matching ranks — this is what sharding resolution relies on."""
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        model = get_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        axes = model.param_axes()
+        jax.tree.map(
+            lambda a, p: None if len(a) == len(p.shape) else
+            pytest.fail(f"{arch}: axes {a} vs shape {p.shape}"),
+            axes, params,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+
+def test_input_specs_cover_all_cells():
+    """input_specs yields well-formed ShapeDtypeStructs for every assigned
+    (arch × applicable shape) — 40 cells minus documented skips."""
+    n = 0
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(specs):
+                assert all(d > 0 for d in leaf.shape)
+            n += 1
+    # 10 archs × 4 shapes = 40 assigned cells; long_500k is skipped for the
+    # 8 pure full-attention archs (DESIGN.md §4) → 32 runnable cells.
+    assert n == 32
