@@ -3,19 +3,35 @@
     Table 2  → bench_kernels       (per-ISAX speedups via the compiler)
     Table 3  → bench_compile_stats (e-graph compilation statistics)
     Fig 2/3  → bench_synthesis     (interface-model decision quality)
-    Fig 8    → bench_llm_serve     (LLM TTFT/ITL, int8)
+    Fig 8    → bench_llm_serve     (LLM TTFT/ITL, int8, continuous batching)
     §Roofline→ bench_roofline      (dry-run aggregate)
 
-Prints ``name,us_per_call,derived`` CSV.  Env: BENCH_SMOKE=0 for full sizes.
+Prints ``name,us_per_call,derived`` CSV.  After ``llm_serve`` runs, its
+per-scenario records (schema: scenario, ttft_s, itl_s, tokens_per_s, …)
+are written to ``BENCH_serve.json`` so CI can archive the perf trajectory.
+
+Env: BENCH_SMOKE=0 for full sizes.  ``--only <name>[,<name>…]`` restricts
+to a subset of modules (e.g. ``--only llm_serve`` in CI).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
+SERVE_ARTIFACT = "BENCH_serve.json"
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset to run")
+    ap.add_argument("--artifact-dir", default=".",
+                    help="where to write BENCH_serve.json")
+    args = ap.parse_args()
+
     from benchmarks import (bench_compile_stats, bench_kernels,
                             bench_llm_serve, bench_roofline, bench_synthesis)
     modules = [
@@ -25,6 +41,12 @@ def main() -> None:
         ("llm_serve", bench_llm_serve),
         ("roofline", bench_roofline),
     ]
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - {n for n, _ in modules}
+        if unknown:
+            raise SystemExit(f"unknown bench module(s): {sorted(unknown)}")
+        modules = [(n, m) for n, m in modules if n in wanted]
     print("name,us_per_call,derived")
     failed = 0
     for name, mod in modules:
@@ -35,6 +57,12 @@ def main() -> None:
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        if name == "llm_serve" and getattr(mod, "JSON_RECORDS", None):
+            path = f"{args.artifact_dir}/{SERVE_ARTIFACT}"
+            with open(path, "w") as f:
+                json.dump(mod.JSON_RECORDS, f, indent=2)
+            print(f"# wrote {path} ({len(mod.JSON_RECORDS)} records)",
+                  flush=True)
     if failed:
         raise SystemExit(1)
 

@@ -1,4 +1,9 @@
-"""Serving launcher CLI: ``python -m repro.launch.serve --arch <id> ...``."""
+"""Serving launcher CLI: ``python -m repro.launch.serve --arch <id> ...``.
+
+``--continuous`` drives the paged-KV continuous-batching engine on a mixed-
+length Poisson workload; the default drives the static-batch engine on a
+uniform batch (the original one-shot demo).
+"""
 
 from __future__ import annotations
 
@@ -8,7 +13,8 @@ import jax
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousEngine, ServeEngine
+from repro.serve.scheduler import make_poisson_workload
 
 
 def main():
@@ -19,11 +25,55 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--int8", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a Poisson workload")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="workload size for --continuous")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+
+    if args.continuous:
+        ps = args.page_size
+        max_len = max(128, args.prompt_len + args.tokens + 16)
+        max_len += (-max_len) % ps
+        # Mixed-length workload scaled to the flags: prompts up to
+        # --prompt-len, outputs up to --tokens.
+        prompt_lens = tuple(sorted({max(4, args.prompt_len // 2),
+                                    args.prompt_len}))
+        out_lens = tuple(sorted({max(2, args.tokens // 4),
+                                 max(2, args.tokens // 2), args.tokens}))
+        # Buckets must be page multiples; derive them from the page size so
+        # any --page-size works, growing until the largest prompt is covered.
+        buckets, m = [], 1
+        while ps * m <= max_len:
+            buckets.append(ps * m)
+            if ps * m >= args.prompt_len:
+                break
+            m *= 2
+        if buckets[-1] < args.prompt_len:
+            # Doubling overshot max_len before covering the prompt; a
+            # rounded-up page multiple always fits (max_len ≥ prompt+tokens).
+            buckets.append(args.prompt_len + (-args.prompt_len) % ps)
+        buckets = tuple(buckets)
+        eng = ContinuousEngine(cfg, max_batch=args.batch,
+                               page_size=ps, max_len=max_len,
+                               prompt_buckets=buckets, quantize=args.int8)
+        reqs = make_poisson_workload(args.requests, rate=2.0, vocab=cfg.vocab,
+                                     prompt_lens=prompt_lens,
+                                     out_lens=out_lens)
+        stats = eng.run(reqs)
+        print(f"arch={cfg.name} continuous int8={args.int8} "
+              f"requests={stats.n_requests} tokens={stats.total_tokens} "
+              f"TTFT={stats.mean_ttft_s * 1e3:.1f}ms "
+              f"ITL={stats.mean_itl_s * 1e3:.2f}ms "
+              f"({stats.tokens_per_s:.1f} tok/s, "
+              f"{stats.decode_steps} decode steps)")
+        return
+
     eng = ServeEngine(cfg, max_len=args.prompt_len + args.tokens + 8,
                       quantize=args.int8)
     prompts = jax.random.randint(jax.random.key(0),

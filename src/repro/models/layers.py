@@ -262,6 +262,43 @@ def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
             k_cache, v_cache)
 
 
+def attention_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
+                           page_table, seq_lens, active):
+    """One-token decode against a block-paged KV pool (vLLM-style).
+
+    x: (B,1,d) new-token activations for every batch slot (inactive slots
+    carry dummy tokens so the batch shape is jit-stable).
+    k_pages/v_pages: (N, page, K, hd) shared page pools for this layer.
+    page_table: (B, P) int32 — logical page p of slot b lives in physical
+    page ``page_table[b, p]``; unused entries may hold any valid index
+    (their positions are masked).
+    seq_lens: (B,) int32 tokens already stored per slot; the new token is
+    written at logical position ``seq_lens[b]``.
+    active: (B,) bool — inactive slots write nowhere (OOB index + drop).
+    Returns (out (B,1,d), k_pages, v_pages).
+    """
+    hd = cfg.resolved_head_dim()
+    B = x.shape[0]
+    N, page = k_pages.shape[0], k_pages.shape[1]
+    P = page_table.shape[1]
+    positions = seq_lens[:, None].astype(jnp.int32)          # (B,1) per-slot
+    q, k, v = _qkv(params, x, cfg, positions)
+    phys = page_table[jnp.arange(B), seq_lens // page]       # (B,)
+    slot = seq_lens % page
+    phys = jnp.where(active, phys, N)                        # OOB → dropped
+    k_pages = k_pages.at[phys, slot].set(k[:, 0].astype(k_pages.dtype),
+                                         mode="drop")
+    v_pages = v_pages.at[phys, slot].set(v[:, 0].astype(v_pages.dtype),
+                                         mode="drop")
+    kg = k_pages[page_table].reshape(B, P * page, *k_pages.shape[2:])
+    vg = v_pages[page_table].reshape(B, P * page, *v_pages.shape[2:])
+    mask = jnp.arange(P * page)[None, None, :] <= seq_lens[:, None, None]
+    out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, hd)
+    cd = dtype_of(cfg.compute_dtype)
+    return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)),
+            k_pages, v_pages)
+
+
 def make_mask(kind: str, S: int, T: Optional[int] = None,
               n_prefix: int = 0) -> jnp.ndarray:
     """(1, S, T) boolean attention mask."""

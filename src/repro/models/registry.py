@@ -9,7 +9,7 @@ given shape cell — the dry-run contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,12 @@ class Model:
     prefill: Callable              # (params, batch, pad_to) -> (logits, caches)
     decode_step: Callable          # (params, token, caches, pos) -> (logits, caches)
     param_axes: Callable
+    # Paged-KV serving entry points (continuous batching); only attention
+    # families implement them — None elsewhere.
+    prefill_at: Optional[Callable] = None      # (params, batch, length) -> (logits, caches)
+    decode_paged: Optional[Callable] = None    # (params, tokens, k_pages, v_pages,
+    #                                             page_table, seq_lens, active)
+    #                                           -> (logits, k_pages, v_pages)
 
 
 def get_model(cfg: ModelConfig) -> Model:
@@ -40,6 +46,14 @@ def get_model(cfg: ModelConfig) -> Model:
         mod = encdec
     else:
         raise ValueError(cfg.family)
+    paged = {}
+    if mod is transformer and cfg.family in ("dense", "moe"):
+        paged = {
+            "prefill_at": lambda p, b, length: transformer.prefill_at(
+                p, b, length, cfg),
+            "decode_paged": lambda p, t, kp, vp, pt, sl, act:
+                transformer.decode_step_paged(p, t, kp, vp, pt, sl, act, cfg),
+        }
     return Model(
         cfg=cfg,
         init=lambda key: mod.init_params(cfg, key),
@@ -48,6 +62,7 @@ def get_model(cfg: ModelConfig) -> Model:
                                                       pad_to=pad_to),
         decode_step=lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg),
         param_axes=lambda: mod.param_axes(cfg),
+        **paged,
     )
 
 

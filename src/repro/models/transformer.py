@@ -164,6 +164,59 @@ def prefill(params, batch, cfg: ModelConfig, pad_to: Optional[int] = None):
     return logits[:, 0], {"k": k_stack, "v": v_stack}
 
 
+def prefill_at(params, batch, length, cfg: ModelConfig):
+    """Prefill a (possibly right-padded) prompt and read logits at position
+    ``length - 1`` instead of the last position.  Under a causal mask the
+    hidden states and KV at positions < ``length`` are unaffected by padding
+    tokens after them, so this is exact for bucketed prompts.
+
+    batch: {'tokens': (B, S_pad)}; length: () int32 true prompt length.
+    Returns (logits (B, vocab), {'k','v'} (L, B, S_pad, K, hd)).
+    """
+    x = _inputs_to_x(params, batch, cfg)
+    B, S, _ = x.shape
+    mask = L.make_mask("causal", S)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True)
+    k_stack, v_stack = kv
+    h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+    logits = L.unembed(_unembed_table(params, cfg), h_last, cfg)
+    return logits[:, 0], {"k": k_stack, "v": v_stack}
+
+
+def decode_step_paged(params, tokens, k_pages, v_pages, page_table, seq_lens,
+                      active, cfg: ModelConfig):
+    """One-token decode through the paged KV pools (see
+    ``layers.attention_decode_paged``).  tokens: (B,) int32; pools carry a
+    leading layer axis (L, N, page, K, hd) and are scanned alongside the
+    stacked block params so the batch/pool shapes stay constant across
+    request admissions and evictions.
+
+    Returns (logits (B, vocab), k_pages, v_pages).
+    """
+    x = L.embed(params["embed"], tokens[:, None], cfg)  # (B,1,d)
+
+    def body(h, xs):
+        bp, kp, vp = xs
+        a, kp, vp = L.attention_decode_paged(
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
+            cfg, kp, vp, page_table, seq_lens, active)
+        h = h + a
+        if _is_moe(cfg):
+            y, _ = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], h,
+                                                cfg.norm_eps), cfg)
+        else:
+            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
+                      cfg)
+        return h + y, (kp, vp)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], k_pages, v_pages))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    return logits[:, 0], k_new, v_new
+
+
 def decode_step(params, token, caches, pos, cfg: ModelConfig):
     """One-token decode.  token: (B,) int32; caches: {'k','v'} (L,B,T,K,hd);
     pos: () int32.  Returns (logits (B, vocab), new caches)."""

@@ -1,0 +1,165 @@
+"""Block-paged KV cache for continuous-batching serving (vLLM-style).
+
+The monolithic per-request ``(B, T, K, hd)`` cache of the static engine
+wastes HBM proportional to ``max_len`` for every request regardless of its
+actual length, and its batch dimension is welded to the request group, so
+admitting a new request mid-decode would change jit shapes.  Here KV lives
+in a shared pool of fixed-size pages:
+
+    k_pages / v_pages : (L, n_pages, page_size, K, hd)
+
+and each batch *slot* owns a row of a page table mapping logical page p →
+physical page id.  The decode step gathers pages through the table, so the
+jit'd shapes (pool, table, seq_lens) are constant no matter which requests
+come and go — only the table/length *contents* change.
+
+``PageAllocator`` is pure host-side bookkeeping (free list with double-free
+and leak detection); ``PagedKVCache`` owns the device pools plus the table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class PageAllocationError(RuntimeError):
+    """Raised when the pool cannot satisfy an allocation."""
+
+
+class PageAllocator:
+    """Free-list allocator over ``n_pages`` physical pages.
+
+    Guards the two classic lifetime bugs: freeing a page twice and leaking
+    pages when a request retires.  ``check_leaks`` asserts the pool is
+    exactly full again once no requests are live.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise PageAllocationError(
+                f"requested {n} pages, only {len(self._free)} free "
+                f"of {self.n_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise PageAllocationError(
+                    f"double-free or foreign page: {p}")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+    def check_invariants(self) -> None:
+        assert len(self._free) + len(self._allocated) == self.n_pages, (
+            f"page leak: {len(self._free)} free + "
+            f"{len(self._allocated)} allocated != {self.n_pages}")
+        assert len(set(self._free)) == len(self._free), "duplicate free page"
+        assert not (set(self._free) & self._allocated), (
+            "page simultaneously free and allocated")
+
+    def check_leaks(self) -> None:
+        self.check_invariants()
+        assert not self._allocated, (
+            f"{len(self._allocated)} pages leaked: "
+            f"{sorted(self._allocated)[:8]}…")
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device page pools + host page table for ``max_batch`` slots."""
+
+    cfg: ModelConfig
+    max_batch: int
+    page_size: int
+    n_pages: int
+    max_len: int
+
+    def __post_init__(self):
+        cfg = self.cfg
+        assert self.max_len % self.page_size == 0, (
+            "max_len must be a page multiple")
+        self.pages_per_seq = self.max_len // self.page_size
+        cd = L.dtype_of(cfg.compute_dtype)
+        shape = (cfg.n_layers, self.n_pages, self.page_size,
+                 cfg.n_kv_heads, cfg.resolved_head_dim())
+        self.k_pages = jnp.zeros(shape, cd)
+        self.v_pages = jnp.zeros(shape, cd)
+        self.allocator = PageAllocator(self.n_pages)
+        # Host-side view; pushed to device each decode step (tiny int arrays).
+        self.page_table = np.zeros((self.max_batch, self.pages_per_seq),
+                                   np.int32)
+        self.seq_lens = np.zeros((self.max_batch,), np.int32)
+        self._slot_pages: dict[int, list[int]] = {}
+
+    # -- lifetime ----------------------------------------------------------
+
+    def pages_needed(self, total_tokens: int) -> int:
+        return -(-total_tokens // self.page_size)
+
+    def can_admit(self, total_tokens: int) -> bool:
+        return self.allocator.can_alloc(self.pages_needed(total_tokens))
+
+    def bind_slot(self, slot: int, total_tokens: int) -> list[int]:
+        """Reserve pages covering the request's whole lifetime (prompt bucket
+        + max new tokens) so decode can never fail mid-flight."""
+        assert slot not in self._slot_pages, f"slot {slot} already bound"
+        pages = self.allocator.alloc(self.pages_needed(total_tokens))
+        self._slot_pages[slot] = pages
+        self.page_table[slot] = 0
+        self.page_table[slot, :len(pages)] = pages
+        self.seq_lens[slot] = 0
+        return pages
+
+    def release_slot(self, slot: int) -> None:
+        self.allocator.free(self._slot_pages.pop(slot))
+        self.page_table[slot] = 0
+        self.seq_lens[slot] = 0
+
+    # -- data movement -----------------------------------------------------
+
+    def write_prefill(self, slot: int, kv: dict, length: int) -> None:
+        """Scatter a prefill KV stack (L, 1, S_pad, K, hd) into this slot's
+        pages.  S_pad must be a page multiple (prompt bucketing guarantees
+        it); padded positions are written too but stay masked until decode
+        overwrites them."""
+        k, v = kv["k"], kv["v"]
+        s_pad = k.shape[2]
+        assert s_pad % self.page_size == 0
+        n = s_pad // self.page_size
+        ids = self.page_table[slot, :n]
+        lk = k.shape[0]
+        shape = (lk, n, self.page_size) + k.shape[3:]
+        self.k_pages = self.k_pages.at[:, ids].set(
+            k[:, 0].reshape(shape).astype(self.k_pages.dtype))
+        self.v_pages = self.v_pages.at[:, ids].set(
+            v[:, 0].reshape(shape).astype(self.v_pages.dtype))
+        self.seq_lens[slot] = length
+
+    def device_views(self, active_slots: set[int]):
+        """(page_table, seq_lens, active) device arrays for the decode step."""
+        active = np.zeros((self.max_batch,), bool)
+        for s in active_slots:
+            active[s] = True
+        return (jnp.asarray(self.page_table), jnp.asarray(self.seq_lens),
+                jnp.asarray(active))

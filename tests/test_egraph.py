@@ -1,6 +1,9 @@
 """E-graph engine invariants (paper §2.3/§5.2) — unit + hypothesis property."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import expr

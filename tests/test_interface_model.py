@@ -3,6 +3,8 @@
 import itertools
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import aquas_ir as ir

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import reduced
