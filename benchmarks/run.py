@@ -6,12 +6,15 @@
     Fig 8    → bench_llm_serve     (LLM TTFT/ITL, int8, continuous batching)
     §Roofline→ bench_roofline      (dry-run aggregate)
 
-Prints ``name,us_per_call,derived`` CSV.  After ``llm_serve`` runs, its
-per-scenario records (schema: scenario, ttft_s, itl_s, tokens_per_s, …)
-are written to ``BENCH_serve.json`` so CI can archive the perf trajectory.
+Prints ``name,us_per_call,derived`` CSV.  Modules with a ``JSON_RECORDS``
+list get their per-scenario records written to a JSON artifact so CI can
+archive the perf trajectory: ``llm_serve`` → ``BENCH_serve.json`` (schema:
+scenario, ttft_s, itl_s, tokens_per_s, …) and ``compile_stats`` →
+``BENCH_compile.json`` (Table-3 rows plus the dispatch sweep's ISAX
+match-rate / compile-cache hit-rate).
 
 Env: BENCH_SMOKE=0 for full sizes.  ``--only <name>[,<name>…]`` restricts
-to a subset of modules (e.g. ``--only llm_serve`` in CI).
+to a subset of modules (e.g. ``--only llm_serve,compile_stats`` in CI).
 """
 
 from __future__ import annotations
@@ -21,7 +24,10 @@ import json
 import sys
 import traceback
 
-SERVE_ARTIFACT = "BENCH_serve.json"
+ARTIFACTS = {
+    "llm_serve": "BENCH_serve.json",
+    "compile_stats": "BENCH_compile.json",
+}
 
 
 def main() -> None:
@@ -57,8 +63,9 @@ def main() -> None:
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
-        if name == "llm_serve" and getattr(mod, "JSON_RECORDS", None):
-            path = f"{args.artifact_dir}/{SERVE_ARTIFACT}"
+        artifact = ARTIFACTS.get(name)
+        if artifact and getattr(mod, "JSON_RECORDS", None):
+            path = f"{args.artifact_dir}/{artifact}"
             with open(path, "w") as f:
                 json.dump(mod.JSON_RECORDS, f, indent=2)
             print(f"# wrote {path} ({len(mod.JSON_RECORDS)} records)",

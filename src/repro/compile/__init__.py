@@ -1,0 +1,40 @@
+"""Compiler-driven kernel dispatch (trace → saturate → match → extract →
+kernel).
+
+The models' hot ops are captured into the ``core/expr`` mini-IR
+(``trace``), lowered through equality saturation + skeleton/component ISAX
+matching with a persistent in-process compile cache (``dispatch``), and
+executed through the backend policy object threaded into models and serve
+engines (``config.LoweringConfig``).
+"""
+
+from repro.compile.config import (
+    VALID_BACKENDS,
+    LoweringConfig,
+    default_lowering,
+    get_default_backend,
+    set_default_backend,
+    set_default_lowering,
+)
+from repro.compile.dispatch import (
+    CompileRecord,
+    Dispatcher,
+    MatchOutcome,
+    get_dispatcher,
+)
+from repro.compile.trace import TARGET_ISAX, OpKey
+
+__all__ = [
+    "VALID_BACKENDS",
+    "LoweringConfig",
+    "default_lowering",
+    "get_default_backend",
+    "set_default_backend",
+    "set_default_lowering",
+    "CompileRecord",
+    "Dispatcher",
+    "MatchOutcome",
+    "get_dispatcher",
+    "TARGET_ISAX",
+    "OpKey",
+]

@@ -1,0 +1,110 @@
+"""``LoweringConfig``: the backend/dispatch handle threaded through models
+and engines, replacing the old ``models.layers`` module-global impl flags.
+
+Environment overrides (``REPRO_ATTENTION_IMPL``, falling back to
+``REPRO_BACKEND``) are read in exactly one place — this constructor — and
+only when no explicit backend is given.  Everything downstream (layers,
+model families, serve engines, launchers) receives the object; nothing else
+consults ``os.environ``.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.compile.dispatch import CompileRecord, Dispatcher, get_dispatcher
+from repro.compile.trace import OpKey
+from repro.kernels import ref as kref
+
+VALID_BACKENDS = ("xla", "xla_chunked", "pallas", "pallas_interpret")
+
+#: First env var set wins; read only by the LoweringConfig constructor.
+_ENV_VARS = ("REPRO_ATTENTION_IMPL", "REPRO_BACKEND")
+
+
+class LoweringConfig:
+    """Per-model/engine lowering policy.
+
+    backend:
+      'xla'              — reference jnp lowering everywhere (default)
+      'xla_chunked'      — online-softmax chunked attention in pure XLA
+      'pallas'           — compiled Pallas ISAX kernels (TPU)
+      'pallas_interpret' — Pallas kernel bodies in interpret mode (CPU tests)
+
+    The backend states a *preference*; the dispatcher still decides per
+    (op, shape, dtype) whether the e-graph pipeline matched an ISAX and
+    whether the synthesis schedule is feasible, falling back to the XLA
+    reference otherwise.
+    """
+
+    def __init__(self, backend: Optional[str] = None,
+                 dispatcher: Optional[Dispatcher] = None):
+        if backend is None:
+            for name in _ENV_VARS:
+                backend = os.environ.get(name)
+                if backend:
+                    break
+            backend = backend or "xla"
+        if backend not in VALID_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"valid: {VALID_BACKENDS}")
+        self.backend = backend
+        self.interpret = backend == "pallas_interpret"
+        self.dispatcher = dispatcher or get_dispatcher()
+
+    def __repr__(self):
+        return f"LoweringConfig(backend={self.backend!r})"
+
+    def lower(self, op: str, shape, dtype) -> CompileRecord:
+        """Compile-cache lookup for one op instance (called at trace time)."""
+        return self.dispatcher.lower(
+            OpKey(op, tuple(int(s) for s in shape), str(dtype), self.backend))
+
+    # -- standalone op entry points (ops with no models/ host function) ----
+
+    def int8_matmul(self, x, wq, scale):
+        """Quantized GEMM through the dispatcher: x (M,K) float, wq (N,K)
+        int8, scale (N,) → (M,N)."""
+        M, K = x.shape
+        N = wq.shape[0]
+        rec = self.lower("int8_matmul", (M, K, N), x.dtype)
+        if rec.impl == "isax":
+            return rec.kernel_fn(x, wq, scale, interpret=self.interpret)
+        return kref.int8_matmul_ref(x, wq, scale)
+
+
+# ---------------------------------------------------------------------------
+# Process default (what model functions use when no LoweringConfig is
+# threaded in — e.g. the trainer and the dry-run launcher).
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[LoweringConfig] = None
+
+
+def default_lowering() -> LoweringConfig:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = LoweringConfig()
+    return _DEFAULT
+
+
+def set_default_lowering(lowering: LoweringConfig) -> Optional[LoweringConfig]:
+    """Install a new process-default; returns the prior one (for restore)."""
+    global _DEFAULT
+    prior = _DEFAULT
+    _DEFAULT = lowering
+    return prior
+
+
+def set_default_backend(backend: str) -> str:
+    """Launcher convenience: swap the default backend, returning the prior
+    backend name.  Note jit caches traces — changing the default does not
+    retrace already-compiled functions (same as the old global flag)."""
+    prior = default_lowering().backend
+    set_default_lowering(LoweringConfig(backend=backend))
+    return prior
+
+
+def get_default_backend() -> str:
+    return default_lowering().backend

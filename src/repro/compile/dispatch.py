@@ -1,0 +1,249 @@
+"""Compiler-driven kernel dispatch: the lowering pass behind every hot op.
+
+For each ``OpKey`` (op, shape, dtype, backend) the dispatcher runs the full
+retargetable-compiler flow over the traced software program — equality
+saturation (``core/rewrites``) interleaved with ISAX-guided external loop
+transforms, then skeleton/component matching (``core/matching``) — and
+decides whether to extract an ``isax:*`` kernel call (a Pallas entry point
+from ``kernels/ops.py``, with a schedule from ``core/kernel_synth``) or fall
+back to the XLA reference.  Decisions live in a persistent in-process
+compile cache, so the e-graph work is paid once per op kind and the
+schedule/tileability decision once per shape; later jit traces of the same
+op hit the cache.
+
+Kernel entry points are resolved here, at dispatch/compile time (module
+import), never lazily inside a forward function: a ``CompileRecord`` carries
+the bound callable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.compile.trace import TARGET_ISAX, OpKey, trace_kind, trace_term
+from repro.core.kernel_synth import (
+    choose_flash_blocks,
+    choose_matmul_blocks,
+    choose_ssd_blocks,
+)
+from repro.core.offload import compile_program, isax_library
+from repro.kernels import ops as kops
+from repro.kernels.ops import _down_pow2
+
+#: Minimum query rows for the flash ISAX: the row-blocked skeleton needs at
+#: least one sublane-worth of rows; single-token decode tiles degenerate.
+_MIN_QUERY_TILE = 8
+
+#: ISAX name → resolved kernel entry point (once, at import).
+_KERNELS: dict[str, Callable] = {
+    "flash_attention": kops.flash_attention_gqa,
+    "rmsnorm": kops.rmsnorm,
+    "int8_matvec": kops.int8_matmul,
+    "ssd_step": kops.ssd_scan,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchOutcome:
+    """E-graph compilation result for one trace kind (shape-independent)."""
+
+    matched: tuple[str, ...]
+    internal_rewrites: int
+    external_rewrites: int
+    initial_enodes: int
+    saturated_enodes: int
+
+
+@dataclasses.dataclass
+class CompileRecord:
+    """One compile-cache entry: the match result and lowering decision for a
+    single (op, shape, dtype, backend) tuple."""
+
+    key: OpKey
+    impl: str                      # 'isax' | 'chunked' | 'reference'
+    matched: tuple[str, ...]       # every ISAX the e-graph pipeline matched
+    target: Optional[str]          # the ISAX this op is expected to target
+    kernel_fn: Optional[Callable]  # resolved entry point when impl == 'isax'
+    schedule: Optional[dict]       # synthesis-chosen tiling when impl == 'isax'
+    note: str                      # human-readable decision rationale
+    outcome: MatchOutcome
+    hits: int = 0
+
+    @property
+    def target_matched(self) -> bool:
+        return self.target is not None and self.target in self.matched
+
+    def row(self) -> dict:
+        return {
+            "op": self.key.op, "shape": list(self.key.shape),
+            "dtype": self.key.dtype, "backend": self.key.backend,
+            "impl": self.impl, "matched": list(self.matched),
+            "target": self.target, "schedule": self.schedule,
+            "note": self.note, "hits": self.hits,
+            "internal_rewrites": self.outcome.internal_rewrites,
+            "external_rewrites": self.outcome.external_rewrites,
+            "saturated_enodes": self.outcome.saturated_enodes,
+        }
+
+
+def _attention_schedule(key: OpKey):
+    B, S, H, K, T, hd = key.shape
+    if S < _MIN_QUERY_TILE:
+        return None, f"degenerate query tile (S={S} < {_MIN_QUERY_TILE})"
+    # itemsize (not a name heuristic) so the recorded schedule matches the
+    # one the kernel wrapper re-derives from q.dtype.itemsize; ml_dtypes
+    # (pulled in via the kernels import) registers bfloat16 with numpy
+    try:
+        dtype_bytes = np.dtype(key.dtype).itemsize
+    except TypeError:
+        dtype_bytes = 2 if key.dtype.endswith("16") else 4
+    sched = choose_flash_blocks(S, T, hd, dtype_bytes)
+    bq = _down_pow2(S, sched.block("q")[0])
+    bk = _down_pow2(T, sched.block("kv")[0])
+    if S % bq or T % bk or H % K:
+        return None, f"untileable shape S={S} T={T} H={H} K={K}"
+    return ({"block_q": bq, "block_k": bk, "buffering": sched.buffering,
+             "est_step_cycles": sched.est_step_cycles,
+             "vmem_bytes": sched.vmem_bytes}, "ok")
+
+
+def _rmsnorm_schedule(key: OpKey):
+    rows, d = key.shape
+    return {"block_rows": _down_pow2(rows, 256)}, "ok"
+
+
+def _int8_matmul_schedule(key: OpKey):
+    M, Kd, N = key.shape
+    sched = choose_matmul_blocks(M, N, Kd, dtype_bytes=1)
+    bm = _down_pow2(M, sched.block("a")[0])
+    bn = _down_pow2(N, sched.block("b")[1])
+    bk = _down_pow2(Kd, sched.block("a")[1])
+    if M % bm or N % bn or Kd % bk:
+        return None, f"untileable shape M={M} N={N} K={Kd}"
+    return ({"block_m": bm, "block_n": bn, "block_k": bk,
+             "buffering": sched.buffering}, "ok")
+
+
+def _ssd_schedule(key: OpKey):
+    b, s, H, P, N = key.shape
+    sched = choose_ssd_blocks(s, H, P, N)
+    chunk = _down_pow2(s, sched.block("chunk")[0])
+    if s % chunk:
+        return None, f"untileable sequence s={s}"
+    return {"chunk": chunk, "buffering": sched.buffering}, "ok"
+
+
+_SCHEDULERS = {
+    "attention": _attention_schedule,
+    "attention_decode": _attention_schedule,
+    "attention_paged": _attention_schedule,
+    "rmsnorm": _rmsnorm_schedule,
+    "int8_matmul": _int8_matmul_schedule,
+    "ssd_scan": _ssd_schedule,
+}
+
+
+class Dispatcher:
+    """Persistent in-process compile cache over the e-graph ISAX pipeline.
+
+    ``lower`` is the only entry point the models call (at jit-trace time, so
+    steady-state inference never pays a dispatch cost).  E-graph outcomes are
+    memoized per trace kind — attention prefill/decode/paged share one
+    saturation run — while schedules and impl decisions are per shape.
+    """
+
+    def __init__(self):
+        self.records: dict[OpKey, CompileRecord] = {}
+        self._outcomes: dict[str, MatchOutcome] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- e-graph compilation (per trace kind) ------------------------------
+
+    def match_outcome(self, kind: str) -> MatchOutcome:
+        out = self._outcomes.get(kind)
+        if out is None:
+            res = compile_program(trace_term(kind), isax_library(),
+                                  case=f"dispatch/{kind}")
+            s = res.stats
+            out = MatchOutcome(tuple(dict.fromkeys(s.matched_isaxes)),
+                               s.internal_rewrites, s.external_rewrites,
+                               s.initial_enodes, s.saturated_enodes)
+            self._outcomes[kind] = out
+        return out
+
+    # -- lowering decision (per key) ---------------------------------------
+
+    def lower(self, key: OpKey) -> CompileRecord:
+        rec = self.records.get(key)
+        if rec is not None:
+            self.hits += 1
+            rec.hits += 1
+            return rec
+        self.misses += 1
+        rec = self._decide(key)
+        self.records[key] = rec
+        return rec
+
+    def _decide(self, key: OpKey) -> CompileRecord:
+        outcome = self.match_outcome(trace_kind(key.op))
+        target = TARGET_ISAX[key.op]
+        matched = target is not None and target in outcome.matched
+
+        def rec(impl, kernel_fn=None, schedule=None, note=""):
+            return CompileRecord(key=key, impl=impl, matched=outcome.matched,
+                                 target=target, kernel_fn=kernel_fn,
+                                 schedule=schedule, note=note,
+                                 outcome=outcome)
+
+        if key.backend in ("pallas", "pallas_interpret"):
+            if not matched:
+                return rec("reference",
+                           note="no ISAX matched; XLA reference")
+            schedule, why = _SCHEDULERS[key.op](key)
+            if schedule is None:
+                return rec("reference",
+                           note=f"{target} matched but {why}; XLA reference")
+            return rec("isax", kernel_fn=_KERNELS[target],
+                       schedule=schedule, note=f"extracted isax:{target}")
+        if key.backend == "xla_chunked" and key.op.startswith("attention"):
+            B, S = key.shape[0], key.shape[1]
+            if S > 1:
+                return rec("chunked",
+                           note="online-softmax chunked XLA lowering")
+            return rec("reference", note="single-row query; XLA reference")
+        return rec("reference", note=f"backend {key.backend}: XLA reference"
+                   + ("" if not matched else f" ({target} matched)"))
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Aggregate match-rate / cache-hit-rate plus per-key rows (the
+        BENCH_compile.json payload)."""
+        recs = list(self.records.values())
+        n = len(recs)
+        matched = sum(1 for r in recs if r.target_matched)
+        isax = sum(1 for r in recs if r.impl == "isax")
+        lookups = self.hits + self.misses
+        return {
+            "n_keys": n,
+            "matched_keys": matched,
+            "isax_keys": isax,
+            "match_rate": matched / n if n else 0.0,
+            "isax_rate": isax / n if n else 0.0,
+            "cache_hits": self.hits,
+            "cache_misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "ops": [r.row() for r in recs],
+        }
+
+
+_DISPATCHER = Dispatcher()
+
+
+def get_dispatcher() -> Dispatcher:
+    """The process-wide compile cache (persistent across engines/models)."""
+    return _DISPATCHER

@@ -1,0 +1,148 @@
+"""Layer-op tracer: capture each hot op as a ``core/expr`` mini-IR program.
+
+This is the front half of the dispatch pipeline (trace → saturate → match →
+extract → kernel).  Every hot op the models execute — GQA attention, paged
+decode attention, RMSNorm, int8/bf16 matmul, the SSD scan — has a
+software-side loop-nest description here.  The spellings are deliberately
+*divergent* from the ISAX library's semantics (scale placed inside the
+matvec, softmax without the max shift, rsqrt via recip∘sqrt): matching is a
+theorem proved by equality saturation plus skeleton/component matching, not
+string equality, which is exactly the paper's retargetability claim.
+
+``OpKey`` is the compile-cache key: one entry per (op, shape, dtype,
+backend).  Shape tuples are per-op conventions (documented on ``op_key``)
+chosen so that every distinct kernel-schedule decision gets its own entry
+while batch-irrelevant details are folded away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.expr import Term, arr, const, for_, var
+
+#: op name → the ISAX the compiler is expected to be able to target (None
+#: means "no specialized datapath exists" — a deliberate negative control
+#: whose keys must lower to the XLA reference).
+TARGET_ISAX: dict[str, str | None] = {
+    "attention": "flash_attention",
+    "attention_decode": "flash_attention",
+    "attention_paged": "flash_attention",
+    "rmsnorm": "rmsnorm",
+    "matmul": None,
+    "int8_matmul": "int8_matvec",
+    "ssd_scan": "ssd_step",
+}
+
+#: op name → trace-table entry (attention variants share one program: the
+#: e-graph outcome is shape-independent; only the schedule decision differs).
+_TRACE_KIND = {
+    "attention": "attention",
+    "attention_decode": "attention",
+    "attention_paged": "attention",
+    "rmsnorm": "rmsnorm",
+    "matmul": "matmul",
+    "int8_matmul": "int8_matmul",
+    "ssd_scan": "ssd_scan",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpKey:
+    """Compile-cache key: one persistent entry per (op, shape, dtype, backend).
+
+    Shape conventions:
+      attention / attention_decode / attention_paged: (B, S, H, K, T, hd)
+      rmsnorm:     (rows, d)
+      matmul:      (rows, d_in, d_out)
+      int8_matmul: (rows, d_in, d_out)
+      ssd_scan:    (b, s, H, P, N)
+    """
+
+    op: str
+    shape: tuple[int, ...]
+    dtype: str
+    backend: str
+
+    def __post_init__(self):
+        if self.op not in TARGET_ISAX:
+            raise ValueError(f"unknown dispatch op {self.op!r}; "
+                             f"known: {sorted(TARGET_ISAX)}")
+
+
+def trace_kind(op: str) -> str:
+    return _TRACE_KIND[op]
+
+
+def _attention_program() -> Term:
+    """Row-blocked attention, AF+RF-divergent: the scale rides inside the
+    matvec and the softmax omits the max shift (the bench's robustness
+    variant) — internal rewrites must recover the flash ISAX form."""
+    i = var("i")
+    q = ("load", arr("Q"), i)
+    s = ("/",
+         ("exp", ("matvec", arr("K"), ("*", var("scale"), q))),
+         ("rowsum", ("exp", ("matvec", arr("K"), ("*", var("scale"), q)))))
+    return for_("i", const(0), var("n_q"), const(1),
+                ("store", arr("P"), i, s),
+                ("store", arr("O"), i,
+                 ("matvec", ("transpose", arr("V")), ("load", arr("P"), i))))
+
+
+def _rmsnorm_program() -> Term:
+    """RMSNorm with rsqrt spelled as recip∘sqrt (RF-divergent)."""
+    i = var("i")
+    x = ("load", arr("Xn"), i)
+    return for_("i", const(0), var("n"), const(1),
+                ("store", arr("On"), i,
+                 ("*", ("*", x, ("recip", ("sqrt",
+                                           ("+", ("rowmean", ("*", x, x)),
+                                            var("eps"))))),
+                  arr("G"))))
+
+
+def _matmul_program() -> Term:
+    """Plain row-wise matmul — no quantization scale, so it must NOT match
+    the int8_matvec ISAX (the library has no bf16 GEMM datapath)."""
+    i = var("i")
+    return for_("i", const(0), var("n"), const(1),
+                ("store", arr("C"), i,
+                 ("matvec", arr("W"), ("load", arr("X"), i))))
+
+
+def _int8_matmul_program() -> Term:
+    i = var("i")
+    return for_("i", const(0), var("n"), const(1),
+                ("store", arr("C"), i,
+                 ("*", var("s_w"),
+                  ("matvec", arr("Wq"), ("load", arr("X"), i)))))
+
+
+def _ssd_program() -> Term:
+    """SSD recurrence with the loop-carried state dependence through H."""
+    t = var("t")
+    upd = ("+",
+           ("*", ("load", arr("A"), t), ("load", arr("H"), const(0))),
+           ("outer", ("load", arr("B"), t), ("load", arr("X"), t)))
+    out = ("matvec", ("transpose", ("load", arr("H"), const(0))),
+           ("load", arr("C"), t))
+    return for_("t", const(0), var("T"), const(1),
+                ("store", arr("H"), const(0), upd),
+                ("store", arr("Y"), t, out))
+
+
+_PROGRAMS = {
+    "attention": _attention_program,
+    "rmsnorm": _rmsnorm_program,
+    "matmul": _matmul_program,
+    "int8_matmul": _int8_matmul_program,
+    "ssd_scan": _ssd_program,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def trace_term(kind: str) -> Term:
+    """The software-side program for one trace kind (memoized: terms are
+    shape-independent, so each kind is built once per process)."""
+    return _PROGRAMS[kind]()

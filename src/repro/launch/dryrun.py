@@ -27,6 +27,8 @@ from repro.models.registry import (                         # noqa: E402
     get_model, input_specs, param_specs)
 from repro.optim.adamw import AdamWConfig, init_state       # noqa: E402
 from repro.roofline.analysis import parse_collectives, roofline  # noqa: E402
+from repro.compile import (                                 # noqa: E402
+    get_default_backend, set_default_backend)
 from repro.models import layers as mlayers                  # noqa: E402
 from repro.sharding.policies import (                       # noqa: E402
     activation_specs, batch_sharding, cache_shardings, param_shardings)
@@ -75,11 +77,10 @@ def build_lowered(arch: str, shape_name: str, mesh,
     mlayers.set_activation_shardings(
         activation_specs(cfg, mesh, shape.global_batch)
         if act_sharding else None)
-    if shape.kind == "decode" and mlayers.get_attention_impl() == "xla_chunked":
-        # chunked attention conflicts with sequence-parallel KV caches
-        # (reshape of the T-sharded dim forces gathers — §Perf granite
-        # decode iteration 4); decode keeps the XLA path.
-        mlayers.set_attention_impl("xla")
+    # (decode under xla_chunked needs no special-casing here anymore: the
+    # dispatcher lowers single-row-query attention to the XLA reference,
+    # which also avoids the sequence-parallel KV reshape-gather pathology —
+    # §Perf granite decode iteration 4.)
 
     if shape.kind == "train":
         opt_cfg = _opt_cfg(cfg)
@@ -164,12 +165,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        prior_impl = mlayers.get_attention_impl()
+        prior_impl = get_default_backend()
         try:
             lowered = build_lowered(arch, shape_name, mesh)
         finally:
             mlayers.set_activation_shardings(None)
-            mlayers.set_attention_impl(prior_impl)
+            set_default_backend(prior_impl)
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()
@@ -219,7 +220,7 @@ def main():
                     choices=["xla", "xla_chunked"],
                     help="xla_chunked = flash-style online-softmax attention")
     args = ap.parse_args()
-    mlayers.set_attention_impl(args.attn_impl)
+    set_default_backend(args.attn_impl)
 
     archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

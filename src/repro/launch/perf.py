@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs.base import SHAPES                     # noqa: E402
 from repro.configs.registry import get_config             # noqa: E402
 from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.compile import set_default_backend  # noqa: E402
 from repro.models import layers as mlayers                # noqa: E402
 from repro.models.registry import (get_model, input_specs,  # noqa: E402
                                    param_specs)
@@ -94,7 +95,7 @@ def build_variant(arch: str, shape_name: str, mesh, variant: str):
                   "fsdp_tp")
     if "flash" in parts:
         # the flash-attention ISAX path (online-softmax chunked attention)
-        mlayers.set_attention_impl("xla_chunked")
+        set_default_backend("xla_chunked")
     variant = ("int8_decode" if "int8_decode" in parts else variant)
     p_shard = param_shardings(cfg, mesh, model.param_axes(), pspecs, policy)
     mlayers.set_activation_shardings(
@@ -278,7 +279,7 @@ def run_variant(arch: str, shape_name: str, variant: str,
             cfg, lowered = build_variant(arch, shape_name, mesh, variant)
         finally:
             mlayers.set_activation_shardings(None)
-            mlayers.set_attention_impl("xla")
+            set_default_backend("xla")
         compiled = lowered.compile()
         cost = compiled.cost_analysis() or {}
         hlo = compiled.as_text()

@@ -11,6 +11,7 @@ import argparse
 
 import jax
 
+from repro.compile import VALID_BACKENDS, LoweringConfig
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
 from repro.serve.engine import ContinuousEngine, ServeEngine
@@ -20,6 +21,9 @@ from repro.serve.scheduler import make_poisson_workload
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
+    ap.add_argument("--backend", default=None, choices=VALID_BACKENDS,
+                    help="kernel lowering backend (default: "
+                         "REPRO_ATTENTION_IMPL env or 'xla')")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -35,6 +39,7 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    lowering = LoweringConfig(backend=args.backend)
 
     if args.continuous:
         ps = args.page_size
@@ -61,7 +66,8 @@ def main():
         buckets = tuple(buckets)
         eng = ContinuousEngine(cfg, max_batch=args.batch,
                                page_size=ps, max_len=max_len,
-                               prompt_buckets=buckets, quantize=args.int8)
+                               prompt_buckets=buckets, quantize=args.int8,
+                               lowering=lowering)
         reqs = make_poisson_workload(args.requests, rate=2.0, vocab=cfg.vocab,
                                      prompt_lens=prompt_lens,
                                      out_lens=out_lens)
@@ -75,7 +81,7 @@ def main():
         return
 
     eng = ServeEngine(cfg, max_len=args.prompt_len + args.tokens + 8,
-                      quantize=args.int8)
+                      quantize=args.int8, lowering=lowering)
     prompts = jax.random.randint(jax.random.key(0),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
     toks, stats = eng.generate({"tokens": prompts}, args.tokens)

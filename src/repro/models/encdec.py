@@ -9,14 +9,17 @@ with a self-attention KV cache plus the (fixed) encoder output.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
 
-def _cross_attention(params, x, enc_out, cfg: ModelConfig, mask):
+def _cross_attention(params, x, enc_out, cfg: ModelConfig, mask, lowering):
     """Cross-attn: queries from x, keys/values from encoder output."""
     cd = L.dtype_of(cfg.compute_dtype)
     hd = cfg.resolved_head_dim()
@@ -26,7 +29,7 @@ def _cross_attention(params, x, enc_out, cfg: ModelConfig, mask):
                    params["wk"].astype(cd))
     v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd),
                    params["wv"].astype(cd))
-    out = L._sdpa_xla(q, k, v, mask, hd)
+    out = L._sdpa(q, k, v, mask, hd, lowering, kind="attention")
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
 
 
@@ -93,7 +96,9 @@ def param_axes(cfg: ModelConfig) -> dict:
     }
 
 
-def encode(params, frame_embeds, cfg: ModelConfig):
+def encode(params, frame_embeds, cfg: ModelConfig,
+           lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     B, T, _ = frame_embeds.shape
     mask = L.make_mask("full", T)
     positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
@@ -102,55 +107,63 @@ def encode(params, frame_embeds, cfg: ModelConfig):
     def body(h, bp):
         h = L.shard_act(h, "btd")
         a, _ = L.attention(bp["attn"],
-                           L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
-                           cfg, mask, positions)
+                           L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps,
+                                     lowering=lw),
+                           cfg, mask, positions, lowering=lw)
         h = h + a
-        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
-                      cfg)
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps,
+                                           lowering=lw), cfg, lowering=lw)
         return h, None
 
     body = L.remat_wrap(body, cfg.remat)
     h, _ = jax.lax.scan(body, x, params["enc_blocks"])
-    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps, lowering=lw)
 
 
 def _decoder(params, x, enc_out, cfg, self_mask, cross_mask, positions,
-             collect_kv=False):
+             collect_kv=False, lowering=None):
+    lw = lowering or default_lowering()
+
     def body(h, bp):
         h = L.shard_act(h, "btd")
         a, kv = L.attention(bp["attn"],
-                            L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
-                            cfg, self_mask, positions)
+                            L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps,
+                                      lowering=lw),
+                            cfg, self_mask, positions, lowering=lw)
         h = h + a
         h = h + _cross_attention(bp["cross"],
-                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps),
-                                 enc_out, cfg, cross_mask)
-        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
-                      cfg)
+                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps,
+                                           lowering=lw),
+                                 enc_out, cfg, cross_mask, lw)
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps,
+                                           lowering=lw), cfg, lowering=lw)
         return h, kv if collect_kv else None
 
     body = L.remat_wrap(body, cfg.remat)
     h, kv = jax.lax.scan(body, x, params["dec_blocks"])
-    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps), kv
+    return L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw), kv
 
 
-def loss(params, batch, cfg: ModelConfig):
+def loss(params, batch, cfg: ModelConfig,
+         lowering: Optional[LoweringConfig] = None):
     """batch: prefix_embeds (B,T,d) [audio frames], tokens (B,S), labels."""
-    enc_out = encode(params, batch["prefix_embeds"], cfg)
+    enc_out = encode(params, batch["prefix_embeds"], cfg, lowering=lowering)
     x = L.embed(params["embed"], batch["tokens"], cfg)
     B, S, _ = x.shape
     T = enc_out.shape[1]
     self_mask = L.make_mask("causal", S)
     cross_mask = L.make_mask("full", S, T)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    h, _ = _decoder(params, x, enc_out, cfg, self_mask, cross_mask, positions)
-    logits = L.unembed(params["unembed"]["w"], h, cfg)
+    h, _ = _decoder(params, x, enc_out, cfg, self_mask, cross_mask, positions,
+                    lowering=lowering)
+    logits = L.unembed(params["unembed"]["w"], h, cfg, lowering=lowering)
     logits = L.shard_act(logits, "btv")
     return L.cross_entropy(logits, batch["labels"])
 
 
-def prefill(params, batch, cfg: ModelConfig, pad_to=None):
-    enc_out = encode(params, batch["prefix_embeds"], cfg)
+def prefill(params, batch, cfg: ModelConfig, pad_to=None,
+            lowering: Optional[LoweringConfig] = None):
+    enc_out = encode(params, batch["prefix_embeds"], cfg, lowering=lowering)
     x = L.embed(params["embed"], batch["tokens"], cfg)
     B, S, _ = x.shape
     T = enc_out.shape[1]
@@ -158,17 +171,20 @@ def prefill(params, batch, cfg: ModelConfig, pad_to=None):
     cross_mask = L.make_mask("full", S, T)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     h, kv = _decoder(params, x, enc_out, cfg, self_mask, cross_mask,
-                     positions, collect_kv=True)
+                     positions, collect_kv=True, lowering=lowering)
     k_stack, v_stack = kv
     if pad_to and pad_to > S:
         pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
         k_stack = jnp.pad(k_stack, pad)
         v_stack = jnp.pad(v_stack, pad)
-    logits = L.unembed(params["unembed"]["w"], h[:, -1:, :], cfg)
+    logits = L.unembed(params["unembed"]["w"], h[:, -1:, :], cfg,
+                       lowering=lowering)
     return logits[:, 0], {"k": k_stack, "v": v_stack, "enc_out": enc_out}
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig):
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], token[:, None], cfg)
     enc_out = caches["enc_out"]
     B = x.shape[0]
@@ -178,18 +194,20 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig):
     def body(h, xs):
         bp, k_c, v_c = xs
         a, k_c, v_c = L.attention_decode(
-            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
-            cfg, k_c, v_c, pos)
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps,
+                                  lowering=lw),
+            cfg, k_c, v_c, pos, lowering=lw)
         h = h + a
         h = h + _cross_attention(bp["cross"],
-                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps),
-                                 enc_out, cfg, cross_mask)
-        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
-                      cfg)
+                                 L.rmsnorm(bp["cross_norm"], h, cfg.norm_eps,
+                                           lowering=lw),
+                                 enc_out, cfg, cross_mask, lw)
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps,
+                                           lowering=lw), cfg, lowering=lw)
         return h, (k_c, v_c)
 
     h, (k_new, v_new) = jax.lax.scan(
         body, x, (params["dec_blocks"], caches["k"], caches["v"]))
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(params["unembed"]["w"], h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(params["unembed"]["w"], h, cfg, lowering=lw)
     return logits[:, 0], {"k": k_new, "v": v_new, "enc_out": enc_out}

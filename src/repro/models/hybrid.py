@@ -11,9 +11,12 @@ sharded over the model axis — vs 2.4 TB if every layer carried KV).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba2 as M
@@ -58,13 +61,16 @@ def param_axes(cfg: ModelConfig) -> dict:
     }
 
 
-def _shared_block(params, x, cfg, mask, positions):
+def _shared_block(params, x, cfg, mask, positions, lowering):
     sp = params["shared_attn"]
     a, kv = L.attention(sp["attn"], L.rmsnorm(sp["attn_norm"], x,
-                                              cfg.norm_eps),
-                        cfg, mask, positions)
+                                              cfg.norm_eps,
+                                              lowering=lowering),
+                        cfg, mask, positions, lowering=lowering)
     x = x + a
-    x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x, cfg.norm_eps), cfg)
+    x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x, cfg.norm_eps,
+                                       lowering=lowering), cfg,
+                  lowering=lowering)
     return x, kv
 
 
@@ -77,28 +83,31 @@ def _sites(cfg: ModelConfig) -> list[tuple[int, int]]:
 
 
 def _forward(params, x, cfg: ModelConfig, mask, positions,
-             collect_caches: bool):
+             collect_caches: bool,
+             lowering: Optional[LoweringConfig] = None):
     """Attention sites are inlined (7 for the full config); the mamba layers
     between sites run under lax.scan on sliced stacked params — keeps the
     HLO size O(sites), not O(layers), for tractable 256-chip compiles."""
+    lw = lowering or default_lowering()
     ssm_cache_parts, kv_caches = [], []
     blocks = params["blocks"]
     for start, end in _sites(cfg):
         x = L.shard_act(x, "btd")
-        x, kv = _shared_block(params, x, cfg, mask, positions)
+        x, kv = _shared_block(params, x, cfg, mask, positions, lw)
         if collect_caches:
             kv_caches.append(kv)
         group = jax.tree.map(lambda a: a[start:end], blocks)
 
         def body(h, bp):
             h2, cache = M.ssm_block(bp, L.shard_act(h, "btd"), cfg,
-                                    collect_cache=collect_caches)
+                                    collect_cache=collect_caches,
+                                    lowering=lw)
             return h2, cache
 
         x, caches = jax.lax.scan(body, x, group)
         if collect_caches:
             ssm_cache_parts.append(caches)
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, lowering=lw)
     caches = None
     if collect_caches:
         k_stack = jnp.stack([kv[0] for kv in kv_caches])
@@ -109,47 +118,56 @@ def _forward(params, x, cfg: ModelConfig, mask, positions,
     return x, caches
 
 
-def loss(params, batch, cfg: ModelConfig):
+def loss(params, batch, cfg: ModelConfig,
+         lowering: Optional[LoweringConfig] = None):
     x = L.embed(params["embed"], batch["tokens"], cfg)
     B, S, _ = x.shape
     mask = L.make_mask("causal", S)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
 
     def fwd(p, h):
-        h2, _ = _forward(p, h, cfg, mask, positions, False)
+        h2, _ = _forward(p, h, cfg, mask, positions, False,
+                         lowering=lowering)
         return h2
 
     h = L.remat_wrap(fwd, cfg.remat)(params, x)
-    logits = L.unembed(params["embed"]["table"], h, cfg)
+    logits = L.unembed(params["embed"]["table"], h, cfg, lowering=lowering)
     logits = L.shard_act(logits, "btv")
     return L.cross_entropy(logits, batch["labels"])
 
 
-def prefill(params, batch, cfg: ModelConfig, pad_to=None):
+def prefill(params, batch, cfg: ModelConfig, pad_to=None,
+            lowering: Optional[LoweringConfig] = None):
     x = L.embed(params["embed"], batch["tokens"], cfg)
     B, S, _ = x.shape
     mask = L.make_mask("causal", S)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    h, caches = _forward(params, x, cfg, mask, positions, True)
+    h, caches = _forward(params, x, cfg, mask, positions, True,
+                         lowering=lowering)
     if pad_to and pad_to > S:
         pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
         caches["k"] = jnp.pad(caches["k"], pad)
         caches["v"] = jnp.pad(caches["v"], pad)
-    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg)
+    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg,
+                       lowering=lowering)
     return logits[:, 0], caches
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig):
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], token[:, None], cfg)
     sp = params["shared_attn"]
     new_k, new_v, new_ssm_parts = [], [], []
     for site, (start, end) in enumerate(_sites(cfg)):
         a, k_c, v_c = L.attention_decode(
-            sp["attn"], L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps),
-            cfg, caches["k"][site], caches["v"][site], pos)
+            sp["attn"], L.rmsnorm(sp["attn_norm"], x, cfg.norm_eps,
+                                  lowering=lw),
+            cfg, caches["k"][site], caches["v"][site], pos, lowering=lw)
         x = x + a
         x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["mlp_norm"], x,
-                                           cfg.norm_eps), cfg)
+                                           cfg.norm_eps, lowering=lw), cfg,
+                      lowering=lw)
         new_k.append(k_c)
         new_v.append(v_c)
         group = jax.tree.map(lambda a: a[start:end], params["blocks"])
@@ -157,13 +175,13 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig):
 
         def body(h, xs):
             bp, cache = xs
-            h2, c2 = M.ssm_block_decode(bp, h, cfg, cache)
+            h2, c2 = M.ssm_block_decode(bp, h, cfg, cache, lowering=lw)
             return h2, c2
 
         x, new_cache = jax.lax.scan(body, x, (group, group_cache))
         new_ssm_parts.append(new_cache)
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(params["embed"]["table"], x, cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(params["embed"]["table"], x, cfg, lowering=lw)
     new_caches = {
         "k": jnp.stack(new_k),
         "v": jnp.stack(new_v),

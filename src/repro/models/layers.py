@@ -4,37 +4,51 @@ Parameters are plain nested dicts of jnp arrays.  Every init_* function has a
 matching *_axes function returning the same pytree structure with logical-axis
 tuples; ``sharding/policies.py`` maps logical axes to mesh axes.
 
-Attention has two implementations selected by ``set_attention_impl``:
-  'xla'              — reference jnp einsum path (default; used for dry-run
-                        lowering and CPU tests)
-  'pallas_interpret' — routes the core softmax(QKᵀ)V through the Pallas
-                        flash-attention kernel in interpret mode (CPU tests)
-On real TPU the 'pallas' value would run the compiled kernel; this container
-is CPU-only so that path is exercised structurally via interpret=True.
+Kernel selection is a *compiler decision*: every hot op (attention, RMSNorm,
+matmul) consults ``repro.compile`` at jit-trace time — the dispatcher runs
+the e-graph ISAX pipeline once per op kind, caches the lowering per
+(op, shape, dtype, backend), and the layer executes whichever implementation
+was extracted (Pallas ISAX kernel, chunked-XLA, or the jnp reference).  The
+backend preference travels in a ``LoweringConfig`` threaded through the
+model families and serve engines; functions fall back to the process-default
+lowering when none is passed (trainer, dry-run).  The old module-global
+``set_attention_impl`` flag survives only as a deprecation shim.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.compile import config as _lowering_config
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
-
-_ATTENTION_IMPL = "xla"
 
 
 def set_attention_impl(impl: str) -> None:
-    global _ATTENTION_IMPL
-    assert impl in ("xla", "xla_chunked", "pallas", "pallas_interpret")
-    _ATTENTION_IMPL = impl
+    """Deprecated shim: swaps the process-default ``LoweringConfig`` backend.
+
+    Use ``repro.compile.LoweringConfig(backend=...)`` (threaded through
+    ``get_model``/the serve engines) or
+    ``repro.compile.set_default_backend`` instead.
+    """
+    warnings.warn(
+        "set_attention_impl is deprecated; construct a "
+        "repro.compile.LoweringConfig(backend=...) or call "
+        "repro.compile.set_default_backend", DeprecationWarning,
+        stacklevel=2)
+    _lowering_config.set_default_backend(impl)
 
 
 def get_attention_impl() -> str:
-    return _ATTENTION_IMPL
+    """Deprecated shim: reads the process-default backend."""
+    return _lowering_config.get_default_backend()
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +95,17 @@ def rmsnorm_axes() -> dict:
     return {"scale": ("embed",)}
 
 
-def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6, *,
+            lowering: Optional[LoweringConfig] = None) -> jnp.ndarray:
+    lw = lowering or default_lowering()
+    d = x.shape[-1]
+    rows = math.prod(x.shape[:-1])
+    rec = lw.lower("rmsnorm", (rows, d), x.dtype)
+    if rec.impl == "isax":
+        out = rec.kernel_fn(x.reshape(rows, d),
+                            params["scale"].astype(jnp.float32), eps=eps,
+                            interpret=lw.interpret)
+        return out.reshape(x.shape).astype(x.dtype)
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(ms + eps)
@@ -222,32 +246,44 @@ def _sdpa_chunked(q, k, v, mask, head_dim: int, chunk: int = 1024):
     return (acc / denom).astype(q.dtype).reshape(B, S, H, hd)
 
 
-def _sdpa(q, k, v, mask, head_dim: int):
-    if _ATTENTION_IMPL in ("pallas", "pallas_interpret"):
-        from repro.kernels import ops as kops
-        return kops.flash_attention_gqa(
-            q, k, v, mask, sm_scale=head_dim ** -0.5,
-            interpret=_ATTENTION_IMPL == "pallas_interpret")
-    if _ATTENTION_IMPL == "xla_chunked":
+def _sdpa(q, k, v, mask, head_dim: int, lowering: LoweringConfig,
+          kind: str = "attention"):
+    """Dispatch-routed scaled-dot-product attention.
+
+    The compile cache decides the implementation per (kind, shape, dtype,
+    backend); the ISAX kernel entry point is pre-resolved in the record (no
+    per-forward import).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    rec = lowering.lower(kind, (B, S, H, K, T, hd), q.dtype)
+    if rec.impl == "isax":
+        return rec.kernel_fn(q, k, v, mask, sm_scale=head_dim ** -0.5,
+                             interpret=lowering.interpret)
+    if rec.impl == "chunked":
         return _sdpa_chunked(q, k, v, mask, head_dim)
     return _sdpa_xla(q, k, v, mask, head_dim)
 
 
-def attention(params, x, cfg: ModelConfig, mask, positions):
+def attention(params, x, cfg: ModelConfig, mask, positions,
+              lowering: Optional[LoweringConfig] = None):
     """Full-sequence attention (train/prefill).  Returns (out, (k, v))."""
+    lw = lowering or default_lowering()
     hd = cfg.resolved_head_dim()
     q, k, v = _qkv(params, x, cfg, positions)
-    out = _sdpa(q, k, v, mask, hd)
+    out = _sdpa(q, k, v, mask, hd, lw, kind="attention")
     cd = dtype_of(cfg.compute_dtype)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)), (k, v)
 
 
-def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
+def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos,
+                     lowering: Optional[LoweringConfig] = None):
     """One-token decode against a static-size KV cache.
 
     x: (B,1,d); k_cache/v_cache: (B,T,K,hd); pos: () int32 current position.
     Returns (out, new_k_cache, new_v_cache).
     """
+    lw = lowering or default_lowering()
     hd = cfg.resolved_head_dim()
     positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
     q, k, v = _qkv(params, x, cfg, positions)
@@ -256,14 +292,16 @@ def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos):
     T = k_cache.shape[1]
     mask = (jnp.arange(T)[None, None, :] <= pos)  # (1,1,T)
     out = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
-                jnp.broadcast_to(mask, (x.shape[0], 1, T)), hd)
+                jnp.broadcast_to(mask, (x.shape[0], 1, T)), hd, lw,
+                kind="attention_decode")
     cd = dtype_of(cfg.compute_dtype)
     return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)),
             k_cache, v_cache)
 
 
 def attention_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
-                           page_table, seq_lens, active):
+                           page_table, seq_lens, active,
+                           lowering: Optional[LoweringConfig] = None):
     """One-token decode against a block-paged KV pool (vLLM-style).
 
     x: (B,1,d) new-token activations for every batch slot (inactive slots
@@ -277,6 +315,7 @@ def attention_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     active: (B,) bool — inactive slots write nowhere (OOB index + drop).
     Returns (out (B,1,d), k_pages, v_pages).
     """
+    lw = lowering or default_lowering()
     hd = cfg.resolved_head_dim()
     B = x.shape[0]
     N, page = k_pages.shape[0], k_pages.shape[1]
@@ -293,7 +332,8 @@ def attention_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     kg = k_pages[page_table].reshape(B, P * page, *k_pages.shape[2:])
     vg = v_pages[page_table].reshape(B, P * page, *v_pages.shape[2:])
     mask = jnp.arange(P * page)[None, None, :] <= seq_lens[:, None, None]
-    out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, hd)
+    out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, hd, lw,
+                kind="attention_paged")
     cd = dtype_of(cfg.compute_dtype)
     return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)),
             k_pages, v_pages)
@@ -336,9 +376,16 @@ def mlp_axes() -> dict:
             "wo": ("ff", "embed")}
 
 
-def mlp(params, x, cfg: ModelConfig):
+def mlp(params, x, cfg: ModelConfig,
+        lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     cd = dtype_of(cfg.compute_dtype)
     x = x.astype(cd)
+    d, ff = params["wi_gate"].shape
+    # The bf16/fp32 GEMM is captured through the dispatcher like every other
+    # hot op; the ISAX library has no plain-matmul datapath, so the compiler
+    # always extracts the XLA reference here (a recorded negative control).
+    lw.lower("matmul", (math.prod(x.shape[:-1]), d, ff), x.dtype)
     g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(cd))
     u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(cd))
     return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
@@ -365,8 +412,12 @@ def embed(params, tokens, cfg: ModelConfig):
     return params["table"].astype(cd)[tokens]
 
 
-def unembed(table_or_w, x, cfg: ModelConfig):
+def unembed(table_or_w, x, cfg: ModelConfig,
+            lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     cd = dtype_of(cfg.compute_dtype)
+    lw.lower("matmul", (math.prod(x.shape[:-1]), x.shape[-1],
+                        table_or_w.shape[0]), x.dtype)
     logits = jnp.einsum("bsd,vd->bsv", x.astype(cd),
                         table_or_w.astype(cd))
     return logits.astype(dtype_of(cfg.logit_dtype))

@@ -17,9 +17,12 @@ inapplicable (DESIGN.md §4); the SSD chunk step is the ISAX analogue.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
@@ -138,13 +141,15 @@ def _causal_conv(xBC, w, bias):
     return out + bias
 
 
-def ssm_block(params, u, cfg: ModelConfig, collect_cache: bool = False):
+def ssm_block(params, u, cfg: ModelConfig, collect_cache: bool = False,
+              lowering: Optional[LoweringConfig] = None):
     """Full-sequence SSD block.  u: (b,s,d).  Returns (out, cache|None)."""
+    lw = lowering or default_lowering()
     s_cfg = cfg.ssm
     d_in, H, N, P = _dims(cfg)
     cd = L.dtype_of(cfg.compute_dtype)
     x_res = u
-    u = L.rmsnorm(params["norm"], u, cfg.norm_eps).astype(cd)
+    u = L.rmsnorm(params["norm"], u, cfg.norm_eps, lowering=lw).astype(cd)
     proj = u @ params["in_proj"].astype(cd)  # (b,s,2*d_in+2N+H)
     z, xBC, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
     xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(cd),
@@ -154,12 +159,22 @@ def ssm_block(params, u, cfg: ModelConfig, collect_cache: bool = False):
     xh = x.reshape(b, s, H, P)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
-    y = ssd_chunked(xh.astype(jnp.float32), dt, A,
-                    B.astype(jnp.float32), C.astype(jnp.float32),
-                    s_cfg.chunk)
+    rec = lw.lower("ssd_scan", (b, s, H, P, N), jnp.float32)
+    if rec.impl == "isax":
+        # kernel layout is (b, H, s, P) / (b, H, s); transpose in and out
+        y = rec.kernel_fn(
+            xh.astype(jnp.float32).transpose(0, 2, 1, 3),
+            dt.transpose(0, 2, 1), A,
+            B.astype(jnp.float32), C.astype(jnp.float32),
+            interpret=lw.interpret).transpose(0, 2, 1, 3)
+    else:
+        y = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                        B.astype(jnp.float32), C.astype(jnp.float32),
+                        s_cfg.chunk)
     y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(b, s, d_in).astype(cd)
-    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps,
+                  lowering=lw)
     out = x_res + (y @ params["out_proj"].astype(cd)).astype(x_res.dtype)
 
     cache = None
@@ -202,14 +217,17 @@ def _final_state(x, dt, A, B, chunk: int):
     return h
 
 
-def ssm_block_decode(params, u, cfg: ModelConfig, cache):
-    """O(1) recurrent step.  u: (b,1,d); cache: {'conv': (b,w-1,ch),
+def ssm_block_decode(params, u, cfg: ModelConfig, cache,
+                     lowering: Optional[LoweringConfig] = None):
+    """O(1) recurrent step (no dispatch: the recurrence has no ISAX-shaped
+    loop to offload).  u: (b,1,d); cache: {'conv': (b,w-1,ch),
     'state': (b,H,N,P)}.  Returns (out, new_cache)."""
+    lw = lowering or default_lowering()
     s_cfg = cfg.ssm
     d_in, H, N, P = _dims(cfg)
     cd = L.dtype_of(cfg.compute_dtype)
     x_res = u
-    u = L.rmsnorm(params["norm"], u, cfg.norm_eps).astype(cd)
+    u = L.rmsnorm(params["norm"], u, cfg.norm_eps, lowering=lw).astype(cd)
     proj = (u @ params["in_proj"].astype(cd))[:, 0]  # (b, 2d_in+2N+H)
     z, xBC_new, dt_raw = (proj[:, :d_in], proj[:, d_in:2 * d_in + 2 * N],
                           proj[:, 2 * d_in + 2 * N:])
@@ -230,7 +248,7 @@ def ssm_block_decode(params, u, cfg: ModelConfig, cache):
     y = y + params["D"][None, :, None] * xh
     y = y.reshape(-1, 1, d_in).astype(cd)
     y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z[:, None, :]),
-                  cfg.norm_eps)
+                  cfg.norm_eps, lowering=lw)
     out = x_res + (y @ params["out_proj"].astype(cd)).astype(x_res.dtype)
     return out, {"conv": conv_hist[:, 1:, :].astype(cache["conv"].dtype),
                  "state": state}
@@ -259,44 +277,51 @@ def param_axes(cfg: ModelConfig) -> dict:
             "final_norm": L.rmsnorm_axes()}
 
 
-def loss(params, batch, cfg: ModelConfig):
+def loss(params, batch, cfg: ModelConfig,
+         lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], batch["tokens"], cfg)
 
     def body(h, bp):
-        h2, _ = ssm_block(bp, L.shard_act(h, "btd"), cfg)
+        h2, _ = ssm_block(bp, L.shard_act(h, "btd"), cfg, lowering=lw)
         return h2, None
 
     body = L.remat_wrap(body, cfg.remat)
     h, _ = jax.lax.scan(body, x, params["blocks"])
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(params["embed"]["table"], h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(params["embed"]["table"], h, cfg, lowering=lw)
     logits = L.shard_act(logits, "btv")
     return L.cross_entropy(logits, batch["labels"])
 
 
-def prefill(params, batch, cfg: ModelConfig, pad_to=None):
+def prefill(params, batch, cfg: ModelConfig, pad_to=None,
+            lowering: Optional[LoweringConfig] = None):
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], batch["tokens"], cfg)
 
     def body(h, bp):
-        h2, cache = ssm_block(bp, h, cfg, collect_cache=True)
+        h2, cache = ssm_block(bp, h, cfg, collect_cache=True, lowering=lw)
         return h2, cache
 
     h, caches = jax.lax.scan(body, x, params["blocks"])
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(params["embed"]["table"], h[:, -1:, :], cfg,
+                       lowering=lw)
     return logits[:, 0], caches
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig):
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                lowering: Optional[LoweringConfig] = None):
     del pos  # SSM decode is position-free (state carries history)
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], token[:, None], cfg)
 
     def body(h, xs):
         bp, cache = xs
-        h2, new_cache = ssm_block_decode(bp, h, cfg, cache)
+        h2, new_cache = ssm_block_decode(bp, h, cfg, cache, lowering=lw)
         return h2, new_cache
 
     h, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(params["embed"]["table"], h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(params["embed"]["table"], h, cfg, lowering=lw)
     return logits[:, 0], new_caches

@@ -16,8 +16,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+
+from typing import Optional
 
 
 def init_moe(cfg: ModelConfig, key) -> dict:
@@ -55,7 +58,8 @@ def moe_axes(cfg: ModelConfig) -> dict:
 
 
 def moe_mlp_grouped(params: dict, x: jnp.ndarray, cfg: ModelConfig,
-                    group_size: int = 512):
+                    group_size: int = 512,
+                    lowering: Optional[LoweringConfig] = None):
     """GShard-style grouped one-hot dispatch (the shardable formulation).
 
     Tokens are split into G groups of ``group_size``; each group routes to a
@@ -73,7 +77,9 @@ def moe_mlp_grouped(params: dict, x: jnp.ndarray, cfg: ModelConfig,
     cd = L.dtype_of(cfg.compute_dtype)
     Tg = min(group_size, T)
     if T % Tg:
-        return moe_mlp(params, x, cfg)  # odd token counts: sort path
+        # odd token counts: sort path (directly — routing back through
+        # moe_mlp would recurse forever for grouped-dispatch configs)
+        return _moe_mlp_sort(params, x, cfg, lowering=lowering)
     G = T // Tg
     xg = x.reshape(G, Tg, d)
 
@@ -90,6 +96,9 @@ def moe_mlp_grouped(params: dict, x: jnp.ndarray, cfg: ModelConfig,
         capacity = Tg
     else:
         capacity = max(1, int(k * Tg / E * m.capacity_factor))
+    # expert GEMMs captured as one dispatch op over the G·E·Cg buffer rows
+    lw = lowering or default_lowering()
+    lw.lower("matmul", (G * E * capacity, d, cfg.d_ff), x.dtype)
     # slot-major positions within each expert (GShard priority order)
     disp = None
     comb = None
@@ -120,17 +129,28 @@ def moe_mlp_grouped(params: dict, x: jnp.ndarray, cfg: ModelConfig,
     y = jnp.einsum("gecd,gtec->gtd", out, comb).reshape(B, S, d)
 
     if "dense" in params:
-        y = y + L.mlp(params["dense"], x, cfg)
+        y = y + L.mlp(params["dense"], x, cfg, lowering=lowering)
     return y.astype(x.dtype), aux
 
 
-def moe_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig):
+def moe_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+            lowering: Optional[LoweringConfig] = None):
     """x: (B, S, d) → (y: (B, S, d), aux_loss: scalar)."""
+    lowering = lowering or default_lowering()
     if (getattr(cfg.moe, "dispatch", "sort") == "grouped"
             and x.shape[0] * x.shape[1] > 1):
         # grouped dispatch also at decode (T = batch tokens): the sort path's
         # scatter is as unshardable there as in training (§Perf addendum)
-        return moe_mlp_grouped(params, x, cfg)
+        return moe_mlp_grouped(params, x, cfg, lowering=lowering)
+    return _moe_mlp_sort(params, x, cfg, lowering=lowering)
+
+
+def _moe_mlp_sort(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  lowering: Optional[LoweringConfig] = None):
+    """Sort+scatter capacity dispatch (minimal FLOPs; GSPMD-hostile scatter).
+    Called directly by ``moe_mlp_grouped``'s odd-token fallback so the two
+    dispatch strategies never route back into each other."""
+    lowering = lowering or default_lowering()
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
@@ -157,6 +177,8 @@ def moe_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig):
         capacity = T
     else:
         capacity = max(1, int(k * T / E * m.capacity_factor))
+    # expert GEMMs captured as one dispatch op over the E·C buffer rows
+    lowering.lower("matmul", (E * capacity, d, cfg.d_ff), x.dtype)
     flat_e = idx.reshape(-1)                                  # (T*k,)
     flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
     order = jnp.argsort(flat_e, stable=True)                  # (T*k,)
@@ -187,5 +209,5 @@ def moe_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig):
     y = jnp.einsum("tkd,tk->td", y_tk, gate.astype(cd)).reshape(B, S, d)
 
     if "dense" in params:  # arctic's parallel dense residual branch
-        y = y + L.mlp(params["dense"], x, cfg)
+        y = y + L.mlp(params["dense"], x, cfg, lowering=lowering)
     return y.astype(x.dtype), aux

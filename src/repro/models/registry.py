@@ -14,6 +14,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, hybrid, mamba2, transformer
 from repro.models import layers as L
@@ -35,7 +36,14 @@ class Model:
     #                                           -> (logits, k_pages, v_pages)
 
 
-def get_model(cfg: ModelConfig) -> Model:
+def get_model(cfg: ModelConfig,
+              lowering: Optional[LoweringConfig] = None) -> Model:
+    """Bind a family module to a config (and optionally a lowering policy).
+
+    ``lowering`` is threaded into every forward entry point so kernel choice
+    is a compile/dispatch decision, not a model-code decision; ``None`` means
+    "resolve the process default at trace time" (the trainer/dry-run path).
+    """
     if cfg.family in ("dense", "moe", "vlm"):
         mod = transformer
     elif cfg.family == "ssm":
@@ -50,17 +58,20 @@ def get_model(cfg: ModelConfig) -> Model:
     if mod is transformer and cfg.family in ("dense", "moe"):
         paged = {
             "prefill_at": lambda p, b, length: transformer.prefill_at(
-                p, b, length, cfg),
+                p, b, length, cfg, lowering=lowering),
             "decode_paged": lambda p, t, kp, vp, pt, sl, act:
-                transformer.decode_step_paged(p, t, kp, vp, pt, sl, act, cfg),
+                transformer.decode_step_paged(p, t, kp, vp, pt, sl, act, cfg,
+                                              lowering=lowering),
         }
     return Model(
         cfg=cfg,
         init=lambda key: mod.init_params(cfg, key),
-        loss=lambda p, b: mod.loss(p, b, cfg),
+        loss=lambda p, b: mod.loss(p, b, cfg, lowering=lowering),
         prefill=lambda p, b, pad_to=None: mod.prefill(p, b, cfg,
-                                                      pad_to=pad_to),
-        decode_step=lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg),
+                                                      pad_to=pad_to,
+                                                      lowering=lowering),
+        decode_step=lambda p, t, c, pos: mod.decode_step(p, t, c, pos, cfg,
+                                                         lowering=lowering),
         param_axes=lambda: mod.param_axes(cfg),
         **paged,
     )

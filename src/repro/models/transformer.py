@@ -18,6 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compile.config import LoweringConfig, default_lowering
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.moe import init_moe, moe_axes, moe_mlp
@@ -85,34 +86,42 @@ def param_axes(cfg: ModelConfig) -> dict:
 # Forward
 # ---------------------------------------------------------------------------
 
-def _block_fwd(cfg: ModelConfig, x, bp, mask, positions):
+def _block_fwd(cfg: ModelConfig, x, bp, mask, positions, lowering):
     x = L.shard_act(x, "btd")
-    a, kv = L.attention(bp["attn"], L.rmsnorm(bp["attn_norm"], x, cfg.norm_eps),
-                        cfg, mask, positions)
+    a, kv = L.attention(bp["attn"],
+                        L.rmsnorm(bp["attn_norm"], x, cfg.norm_eps,
+                                  lowering=lowering),
+                        cfg, mask, positions, lowering=lowering)
     x = x + a
     if _is_moe(cfg):
-        y, aux = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps),
-                         cfg)
+        y, aux = moe_mlp(bp["moe"],
+                         L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps,
+                                   lowering=lowering),
+                         cfg, lowering=lowering)
     else:
-        y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps), cfg)
+        y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], x, cfg.norm_eps,
+                                       lowering=lowering), cfg,
+                  lowering=lowering)
         aux = jnp.zeros((), jnp.float32)
     return x + y, aux, kv
 
 
 def backbone(params, x, cfg: ModelConfig, mask, positions,
-             collect_kv: bool = False):
+             collect_kv: bool = False,
+             lowering: Optional[LoweringConfig] = None):
     """Scan over stacked blocks.  Returns (hidden, aux, kv_stack|None)."""
+    lw = lowering or default_lowering()
 
     def body(carry, bp):
         h, aux = carry
-        h2, a, kv = _block_fwd(cfg, h, bp, mask, positions)
+        h2, a, kv = _block_fwd(cfg, h, bp, mask, positions, lw)
         ys = kv if collect_kv else None
         return (h2, aux + a), ys
 
     body = L.remat_wrap(body, cfg.remat)
     (h, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                 params["blocks"])
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
     return h, aux, ys
 
 
@@ -130,7 +139,8 @@ def _inputs_to_x(params, batch, cfg: ModelConfig):
     return x
 
 
-def loss(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+def loss(params, batch, cfg: ModelConfig, aux_weight: float = 0.01,
+         lowering: Optional[LoweringConfig] = None):
     """batch: tokens (B, S_text), labels (B, S_text) [, prefix_embeds]."""
     x = _inputs_to_x(params, batch, cfg)
     B, S, _ = x.shape
@@ -138,15 +148,17 @@ def loss(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
     mask = L.make_mask(mask_kind, S, n_prefix=cfg.n_prefix_tokens
                        if cfg.family == "vlm" else 0)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    h, aux, _ = backbone(params, x, cfg, mask, positions)
-    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    h, aux, _ = backbone(params, x, cfg, mask, positions, lowering=lowering)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg,
+                       lowering=lowering)
     logits = L.shard_act(logits, "btv")
     n_pref = x.shape[1] - batch["tokens"].shape[1]
     logits = logits[:, n_pref:, :]
     return L.cross_entropy(logits, batch["labels"]) + aux_weight * aux
 
 
-def prefill(params, batch, cfg: ModelConfig, pad_to: Optional[int] = None):
+def prefill(params, batch, cfg: ModelConfig, pad_to: Optional[int] = None,
+            lowering: Optional[LoweringConfig] = None):
     """Returns (last-position logits, kv caches stacked over layers, length)."""
     x = _inputs_to_x(params, batch, cfg)
     B, S, _ = x.shape
@@ -154,17 +166,20 @@ def prefill(params, batch, cfg: ModelConfig, pad_to: Optional[int] = None):
     mask = L.make_mask(mask_kind, S, n_prefix=cfg.n_prefix_tokens
                        if cfg.family == "vlm" else 0)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True)
+    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True,
+                        lowering=lowering)
     k_stack, v_stack = kv  # (L, B, S, K, hd)
     if pad_to and pad_to > S:
         pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
         k_stack = jnp.pad(k_stack, pad)
         v_stack = jnp.pad(v_stack, pad)
-    logits = L.unembed(_unembed_table(params, cfg), h[:, -1:, :], cfg)
+    logits = L.unembed(_unembed_table(params, cfg), h[:, -1:, :], cfg,
+                       lowering=lowering)
     return logits[:, 0], {"k": k_stack, "v": v_stack}
 
 
-def prefill_at(params, batch, length, cfg: ModelConfig):
+def prefill_at(params, batch, length, cfg: ModelConfig,
+               lowering: Optional[LoweringConfig] = None):
     """Prefill a (possibly right-padded) prompt and read logits at position
     ``length - 1`` instead of the last position.  Under a causal mask the
     hidden states and KV at positions < ``length`` are unaffected by padding
@@ -177,15 +192,18 @@ def prefill_at(params, batch, length, cfg: ModelConfig):
     B, S, _ = x.shape
     mask = L.make_mask("causal", S)
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True)
+    h, _, kv = backbone(params, x, cfg, mask, positions, collect_kv=True,
+                        lowering=lowering)
     k_stack, v_stack = kv
     h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
-    logits = L.unembed(_unembed_table(params, cfg), h_last, cfg)
+    logits = L.unembed(_unembed_table(params, cfg), h_last, cfg,
+                       lowering=lowering)
     return logits[:, 0], {"k": k_stack, "v": v_stack}
 
 
 def decode_step_paged(params, tokens, k_pages, v_pages, page_table, seq_lens,
-                      active, cfg: ModelConfig):
+                      active, cfg: ModelConfig,
+                      lowering: Optional[LoweringConfig] = None):
     """One-token decode through the paged KV pools (see
     ``layers.attention_decode_paged``).  tokens: (B,) int32; pools carry a
     leading layer axis (L, N, page, K, hd) and are scanned alongside the
@@ -194,50 +212,57 @@ def decode_step_paged(params, tokens, k_pages, v_pages, page_table, seq_lens,
 
     Returns (logits (B, vocab), k_pages, v_pages).
     """
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], tokens[:, None], cfg)  # (B,1,d)
 
     def body(h, xs):
         bp, kp, vp = xs
         a, kp, vp = L.attention_decode_paged(
-            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
-            cfg, kp, vp, page_table, seq_lens, active)
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps,
+                                  lowering=lw),
+            cfg, kp, vp, page_table, seq_lens, active, lowering=lw)
         h = h + a
         if _is_moe(cfg):
             y, _ = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], h,
-                                                cfg.norm_eps), cfg)
+                                                cfg.norm_eps, lowering=lw),
+                           cfg, lowering=lw)
         else:
-            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
-                      cfg)
+            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps,
+                                           lowering=lw), cfg, lowering=lw)
         return h + y, (kp, vp)
 
     h, (k_new, v_new) = jax.lax.scan(
         body, x, (params["blocks"], k_pages, v_pages))
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg, lowering=lw)
     return logits[:, 0], k_new, v_new
 
 
-def decode_step(params, token, caches, pos, cfg: ModelConfig):
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                lowering: Optional[LoweringConfig] = None):
     """One-token decode.  token: (B,) int32; caches: {'k','v'} (L,B,T,K,hd);
     pos: () int32.  Returns (logits (B, vocab), new caches)."""
+    lw = lowering or default_lowering()
     x = L.embed(params["embed"], token[:, None], cfg)  # (B,1,d)
 
     def body(h, xs):
         bp, k_c, v_c = xs
         a, k_c, v_c = L.attention_decode(
-            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps),
-            cfg, k_c, v_c, pos)
+            bp["attn"], L.rmsnorm(bp["attn_norm"], h, cfg.norm_eps,
+                                  lowering=lw),
+            cfg, k_c, v_c, pos, lowering=lw)
         h = h + a
         if _is_moe(cfg):
             y, _ = moe_mlp(bp["moe"], L.rmsnorm(bp["mlp_norm"], h,
-                                                cfg.norm_eps), cfg)
+                                                cfg.norm_eps, lowering=lw),
+                           cfg, lowering=lw)
         else:
-            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps),
-                      cfg)
+            y = L.mlp(bp["mlp"], L.rmsnorm(bp["mlp_norm"], h, cfg.norm_eps,
+                                           lowering=lw), cfg, lowering=lw)
         return h + y, (k_c, v_c)
 
     h, (k_new, v_new) = jax.lax.scan(
         body, x, (params["blocks"], caches["k"], caches["v"]))
-    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = L.unembed(_unembed_table(params, cfg), h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps, lowering=lw)
+    logits = L.unembed(_unembed_table(params, cfg), h, cfg, lowering=lw)
     return logits[:, 0], {"k": k_new, "v": v_new}

@@ -16,6 +16,13 @@ batching — the baseline the serve benchmark compares against.
 
 The static decode step is the same function the dry-run lowers as
 ``serve_step``.
+
+All engines obtain their attention/rmsnorm/matmul kernels through the
+``repro.compile`` dispatcher: a ``LoweringConfig`` (constructor reads the
+``REPRO_ATTENTION_IMPL`` env override; pass ``lowering=`` to pin a backend)
+is threaded into the model, and the e-graph ISAX pipeline decides per
+(op, shape, dtype, backend) whether prefill/decode run an extracted Pallas
+kernel or the XLA reference.
 """
 
 from __future__ import annotations
@@ -28,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import LoweringConfig
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.registry import Model, get_model
@@ -87,9 +95,15 @@ def quantization_error(params, qtree, dequant) -> float:
 
 class ServeEngine:
     def __init__(self, model_cfg: ModelConfig, params=None, *,
-                 max_len: int = 512, quantize: bool = False, seed: int = 0):
+                 max_len: int = 512, quantize: bool = False, seed: int = 0,
+                 lowering: Optional[LoweringConfig] = None):
         self.cfg = model_cfg
-        self.model = get_model(model_cfg)
+        # Kernel choice is a compile decision: the engine's prefill/decode
+        # obtain attention/rmsnorm/matmul implementations from the
+        # repro.compile dispatcher through this LoweringConfig (env override
+        # REPRO_ATTENTION_IMPL is read by its constructor).
+        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.model = get_model(model_cfg, lowering=self.lowering)
         self.max_len = max_len
         # (memory model: int8 at rest, dequantized once on load — wire/HBM
         # bytes halved)
@@ -185,9 +199,11 @@ class ContinuousEngine:
                  max_batch: int = 8, page_size: int = 16,
                  max_len: int = 128, n_pages: Optional[int] = None,
                  prompt_buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 quantize: bool = False, seed: int = 0):
+                 quantize: bool = False, seed: int = 0,
+                 lowering: Optional[LoweringConfig] = None):
         self.cfg = model_cfg
-        self.model = get_model(model_cfg)
+        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.model = get_model(model_cfg, lowering=self.lowering)
         if self.model.decode_paged is None:
             raise ValueError(
                 f"family {model_cfg.family!r} has no paged decode path")
@@ -280,8 +296,10 @@ class ContinuousEngine:
         if active:
             if self._membership_dirty or self._device_state is None:
                 pt, sl, act = self.cache.device_views(active)
-                self._device_state = (jnp.asarray(self._next_tokens), pt,
-                                      sl, act)
+                # snapshot: _next_tokens is mutated after dispatch and the
+                # host→device copy is async (see device_views)
+                self._device_state = (jnp.asarray(self._next_tokens.copy()),
+                                      pt, sl, act)
                 self._membership_dirty = False
             tokens_d, pt, sl, act = self._device_state
             tokens_d, self.cache.k_pages, self.cache.v_pages, sl = \
@@ -345,9 +363,11 @@ class StaticBatchEngine:
     def __init__(self, model_cfg: ModelConfig, params=None, *,
                  batch: int = 8, max_len: int = 128,
                  prompt_buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 quantize: bool = False, seed: int = 0):
+                 quantize: bool = False, seed: int = 0,
+                 lowering: Optional[LoweringConfig] = None):
         self.cfg = model_cfg
-        self.model = get_model(model_cfg)
+        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.model = get_model(model_cfg, lowering=self.lowering)
         self.params = _init_params(self.model, params, quantize, seed)
         self.batch = batch
         self.max_len = max_len

@@ -157,9 +157,17 @@ class PagedKVCache:
         self.seq_lens[slot] = length
 
     def device_views(self, active_slots: set[int]):
-        """(page_table, seq_lens, active) device arrays for the decode step."""
+        """(page_table, seq_lens, active) device arrays for the decode step.
+
+        The host arrays are snapshotted (``.copy()``) before the transfer:
+        ``jnp.asarray`` enqueues an *async* host→device copy, and callers
+        advance ``seq_lens`` immediately after dispatching the decode step —
+        without the snapshot that mutation races the in-flight transfer and
+        intermittently corrupts the step's lengths.
+        """
         active = np.zeros((self.max_batch,), bool)
         for s in active_slots:
             active[s] = True
-        return (jnp.asarray(self.page_table), jnp.asarray(self.seq_lens),
+        return (jnp.asarray(self.page_table.copy()),
+                jnp.asarray(self.seq_lens.copy()),
                 jnp.asarray(active))

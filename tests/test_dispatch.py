@@ -1,0 +1,278 @@
+"""Compiler-driven kernel dispatch: e-graph lowering decisions, compile-cache
+behavior, numerical parity of the matched-kernel path vs the XLA reference
+across every registered model config, and the deprecation shim for the old
+module-global impl flags."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import (LoweringConfig, Dispatcher, OpKey, TARGET_ISAX,
+                           get_dispatcher)
+from repro.configs.base import reduced
+from repro.configs.registry import _MODULES, get_config
+from repro.models.registry import get_model
+from repro.serve.kv_cache import PagedKVCache
+
+ARCHS = sorted(_MODULES)
+RNG = np.random.default_rng(0)
+
+
+def _models(cfg, disp=None):
+    disp = disp or Dispatcher()
+    ref = get_model(cfg, lowering=LoweringConfig("xla", disp))
+    isx = get_model(cfg, lowering=LoweringConfig("pallas_interpret", disp))
+    return ref, isx
+
+
+def _batch(cfg, B=2, S=16):
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family in ("vlm", "encdec"):
+        batch["prefix_embeds"] = jnp.asarray(
+            RNG.normal(size=(B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# (a) lowering decisions: what the e-graph pipeline matches and extracts
+# ---------------------------------------------------------------------------
+
+class TestLoweringDecisions:
+    def test_attention_extracts_flash_isax(self):
+        lw = LoweringConfig("pallas_interpret", Dispatcher())
+        rec = lw.lower("attention", (1, 128, 4, 2, 128, 64), "float32")
+        assert rec.impl == "isax"
+        assert "flash_attention" in rec.matched
+        assert rec.kernel_fn is not None
+        assert rec.schedule["block_q"] >= 8
+
+    def test_single_row_decode_falls_back(self):
+        """The flash ISAX matched, but a 1-row query can't fill the
+        row-blocked skeleton's tile — the compiler keeps the reference."""
+        lw = LoweringConfig("pallas_interpret", Dispatcher())
+        rec = lw.lower("attention_paged", (4, 1, 4, 2, 64, 16), "float32")
+        assert rec.impl == "reference"
+        assert "flash_attention" in rec.matched  # matched, not extracted
+        assert "degenerate" in rec.note
+
+    def test_plain_matmul_is_negative_control(self):
+        """No bf16 GEMM ISAX exists: the plain matmul term must not match
+        int8_matvec (whose component carries the quantization scale)."""
+        lw = LoweringConfig("pallas_interpret", Dispatcher())
+        rec = lw.lower("matmul", (32, 64, 128), "float32")
+        assert rec.impl == "reference" and rec.matched == ()
+        assert TARGET_ISAX["matmul"] is None
+
+    def test_rmsnorm_ssd_int8_match(self):
+        lw = LoweringConfig("pallas_interpret", Dispatcher())
+        assert lw.lower("rmsnorm", (32, 64), "float32").impl == "isax"
+        assert lw.lower("ssd_scan", (2, 16, 16, 8, 16),
+                        "float32").impl == "isax"
+        assert lw.lower("int8_matmul", (128, 128, 128),
+                        "float32").impl == "isax"
+
+    def test_xla_backend_records_match_but_runs_reference(self):
+        lw = LoweringConfig("xla", Dispatcher())
+        rec = lw.lower("attention", (1, 128, 4, 2, 128, 64), "float32")
+        assert rec.impl == "reference"
+        assert "flash_attention" in rec.matched
+
+    def test_chunked_backend_for_attention(self):
+        lw = LoweringConfig("xla_chunked", Dispatcher())
+        rec = lw.lower("attention", (1, 128, 4, 2, 128, 64), "float32")
+        assert rec.impl == "chunked"
+
+    def test_unknown_op_rejected(self):
+        with pytest.raises(ValueError):
+            OpKey("conv3d", (1,), "float32", "xla")
+
+
+# ---------------------------------------------------------------------------
+# (b) compile cache: persistent in-process, hit on the second lowering
+# ---------------------------------------------------------------------------
+
+class TestCompileCache:
+    def test_cache_hit_on_second_lowering(self):
+        disp = Dispatcher()
+        lw = LoweringConfig("pallas_interpret", disp)
+        key = ("attention", (1, 64, 4, 2, 64, 16), "float32")
+        r1 = lw.lower(*key)
+        assert disp.misses == 1 and disp.hits == 0
+        r2 = lw.lower(*key)
+        assert r2 is r1
+        assert disp.hits == 1 and disp.misses == 1
+        assert r1.hits == 1
+
+    def test_second_trace_hits_cache(self):
+        """Re-tracing the same model (same shapes) must not re-run the
+        e-graph pipeline: every key resolves from the cache."""
+        cfg = reduced(get_config("llama110m"))
+        disp = Dispatcher()
+        model = get_model(cfg, lowering=LoweringConfig("pallas_interpret",
+                                                       disp))
+        params = model.init(jax.random.key(0))
+        batch = _batch(cfg)
+        jax.eval_shape(lambda p, b: model.prefill(p, b, None), params, batch)
+        misses0, hits0 = disp.misses, disp.hits
+        assert misses0 > 0
+        jax.eval_shape(lambda p, b: model.prefill(p, b, None), params, batch)
+        assert disp.misses == misses0, "second trace recompiled"
+        assert disp.hits > hits0
+
+    def test_backend_is_part_of_the_key(self):
+        disp = Dispatcher()
+        shape = (1, 64, 4, 2, 64, 16)
+        a = LoweringConfig("xla", disp).lower("attention", shape, "float32")
+        b = LoweringConfig("pallas_interpret", disp).lower(
+            "attention", shape, "float32")
+        assert a.impl == "reference" and b.impl == "isax"
+        assert disp.misses == 2
+
+    def test_stats_shape(self):
+        disp = Dispatcher()
+        lw = LoweringConfig("pallas_interpret", disp)
+        lw.lower("rmsnorm", (32, 64), "float32")
+        lw.lower("matmul", (32, 64, 128), "float32")
+        st = disp.stats()
+        assert st["n_keys"] == 2 and st["matched_keys"] == 1
+        assert 0.0 < st["match_rate"] < 1.0
+        assert len(st["ops"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# (c) numerical parity: matched-kernel lowering ≡ XLA reference for every
+#     registered model config (prefill, static decode, paged decode)
+# ---------------------------------------------------------------------------
+
+TOL = dict(atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_dispatch_parity(arch):
+    cfg = reduced(get_config(arch))
+    ref, isx = _models(cfg)
+    params = ref.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+
+    logits_ref, caches_ref = ref.prefill(params, batch, None)
+    logits_isx, caches_isx = isx.prefill(params, batch, None)
+    np.testing.assert_allclose(np.asarray(logits_ref),
+                               np.asarray(logits_isx), **TOL,
+                               err_msg=f"{arch}: prefill parity")
+
+    tok = jnp.argmax(logits_ref, -1).astype(jnp.int32)
+    for step in range(2):
+        logits_ref, caches_ref = ref.decode_step(
+            params, tok, caches_ref, jnp.int32(S + step))
+        logits_isx, caches_isx = isx.decode_step(
+            params, tok, caches_isx, jnp.int32(S + step))
+        np.testing.assert_allclose(
+            np.asarray(logits_ref), np.asarray(logits_isx), **TOL,
+            err_msg=f"{arch}: static decode parity at step {step}")
+        tok = jnp.argmax(logits_ref, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).family in ("dense", "moe")])
+def test_dispatch_parity_paged_decode(arch):
+    cfg = reduced(get_config(arch))
+    ref, isx = _models(cfg)
+    params = ref.init(jax.random.key(0))
+    B, PL, MAXLEN, PS, GEN = 2, 16, 64, 16, 3
+    prompts = np.asarray(RNG.integers(0, cfg.vocab, (B, PL)), np.int32)
+
+    def run(model, token_stream=None):
+        """token_stream None: greedy, recording fed tokens.  Otherwise replay
+        the given stream so both lowerings see identical inputs (greedy
+        argmax on near-tied logits would fork the comparison)."""
+        cache = PagedKVCache(cfg, max_batch=B, page_size=PS,
+                             n_pages=B * MAXLEN // PS, max_len=MAXLEN)
+        toks = np.zeros((B,), np.int32)
+        out, fed = [], []
+        for b in range(B):
+            cache.bind_slot(b, PL + GEN)
+            lg, kv = model.prefill_at(
+                params, {"tokens": jnp.asarray(prompts[b:b + 1])},
+                jnp.int32(PL))
+            cache.write_prefill(b, kv, PL)
+            toks[b] = int(jnp.argmax(lg[0]))
+        for step in range(GEN):
+            if token_stream is not None:
+                toks = token_stream[step]
+            fed.append(toks.copy())
+            pt, sl, act = cache.device_views(set(range(B)))
+            lg, cache.k_pages, cache.v_pages = model.decode_paged(
+                params, jnp.asarray(toks), cache.k_pages, cache.v_pages,
+                pt, sl, act)
+            cache.seq_lens[:] += 1
+            toks = np.asarray(jnp.argmax(lg, -1), np.int32)
+            out.append(np.asarray(lg))
+        return out, fed
+
+    ref_out, ref_fed = run(ref)
+    isx_out, _ = run(isx, token_stream=ref_fed)
+    for step, (a, b) in enumerate(zip(ref_out, isx_out)):
+        np.testing.assert_allclose(
+            a, b, **TOL,
+            err_msg=f"{arch}: paged decode parity at step {step}")
+
+
+# ---------------------------------------------------------------------------
+# (d) standalone int8 matmul dispatch parity
+# ---------------------------------------------------------------------------
+
+def test_int8_matmul_dispatch_parity():
+    from repro.kernels import ref as kref
+    disp = Dispatcher()
+    x = jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)
+    wq = jnp.asarray(RNG.integers(-127, 127, size=(128, 128)), jnp.int8)
+    scale = jnp.asarray(RNG.uniform(0.001, 0.02, size=(128,)), jnp.float32)
+    got = LoweringConfig("pallas_interpret", disp).int8_matmul(x, wq, scale)
+    want = kref.int8_matmul_ref(x, wq, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-2, rtol=2e-2)
+    rec = disp.records[OpKey("int8_matmul", (128, 128, 128), "float32",
+                             "pallas_interpret")]
+    assert rec.impl == "isax"
+
+
+# ---------------------------------------------------------------------------
+# (e) env override + deprecation shim (the old module globals)
+# ---------------------------------------------------------------------------
+
+class TestConfigSurface:
+    def test_env_override_read_in_constructor(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ATTENTION_IMPL", "xla_chunked")
+        assert LoweringConfig().backend == "xla_chunked"
+        monkeypatch.delenv("REPRO_ATTENTION_IMPL")
+        monkeypatch.setenv("REPRO_BACKEND", "pallas_interpret")
+        assert LoweringConfig().backend == "pallas_interpret"
+        # explicit backend wins over the environment
+        assert LoweringConfig("xla").backend == "xla"
+
+    def test_invalid_backend_rejected(self):
+        with pytest.raises(ValueError):
+            LoweringConfig("cuda")
+
+    def test_no_module_global_impl_flag_left(self):
+        from repro.models import layers as L
+        assert not hasattr(L, "_ATTENTION_IMPL")
+
+    def test_set_attention_impl_shim(self):
+        import repro.compile as C
+        from repro.models import layers as L
+        prior = C.get_default_backend()
+        try:
+            with pytest.warns(DeprecationWarning):
+                L.set_attention_impl("xla_chunked")
+            assert L.get_attention_impl() == "xla_chunked"
+            assert C.get_default_backend() == "xla_chunked"
+        finally:
+            C.set_default_backend(prior)
+
+    def test_default_dispatcher_is_process_wide(self):
+        assert LoweringConfig("xla").dispatcher is get_dispatcher()

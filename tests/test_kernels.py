@@ -142,7 +142,9 @@ def test_ops_wrappers_choose_synthesized_blocks():
 
 
 def test_layers_pallas_interpret_path_matches_xla():
-    """models.layers attention with impl=pallas_interpret == xla reference."""
+    """models.layers attention with a pallas_interpret LoweringConfig == the
+    xla-reference lowering (kernel choice through the compile dispatcher)."""
+    from repro.compile import Dispatcher, LoweringConfig
     from repro.models import layers as L
     from repro.configs.registry import get_config
     from repro.configs.base import reduced
@@ -152,12 +154,10 @@ def test_layers_pallas_interpret_path_matches_xla():
     x = jnp.asarray(RNG.normal(size=(2, 128, cfg.d_model)), jnp.float32)
     mask = L.make_mask("causal", 128)
     pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
-    L.set_attention_impl("xla")
-    want, _ = L.attention(p, x, cfg, mask, pos)
-    try:
-        L.set_attention_impl("pallas_interpret")
-        got, _ = L.attention(p, x, cfg, mask, pos)
-    finally:
-        L.set_attention_impl("xla")
+    disp = Dispatcher()
+    want, _ = L.attention(p, x, cfg, mask, pos,
+                          lowering=LoweringConfig("xla", disp))
+    got, _ = L.attention(p, x, cfg, mask, pos,
+                         lowering=LoweringConfig("pallas_interpret", disp))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=1e-4)
