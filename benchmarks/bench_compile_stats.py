@@ -106,6 +106,9 @@ def _dispatch_sweep() -> list[str]:
         f"isax_extracted={st['isax_keys']}/{st['n_keys']}_keys",
         f"compile/dispatch_hit_rate,{st['hit_rate'] * 1e6:.0f},"
         f"hits={st['cache_hits']};misses={st['cache_misses']}",
+        f"compile/dispatch_pipelined_rate,"
+        f"{st['pipelined_keys'] / max(st['n_keys'], 1) * 1e6:.0f},"
+        f"burst_dma_selected={st['pipelined_keys']}/{st['n_keys']}_keys",
     ]
 
 

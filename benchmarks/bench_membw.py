@@ -1,0 +1,151 @@
+"""Memory-bandwidth pipeline sweep: burst-DMA pipelined vs unpipelined
+kernels across memory-bound shapes (the hardware-side analog of the paper's
+fast-memory-access evaluation).
+
+For each kernel (flash attention, int8 matmul, SSD scan) and each shape the
+sweep runs both kernel paths — plain BlockSpec streaming and the explicit
+``kernels/pipeline.py`` multi-buffered DMA pipeline — checks numerical
+parity, and records wall time next to the synthesis cost model's verdict
+(chosen depth, predicted gain, interface-model cycle estimates).
+
+Off-TPU the kernels execute in interpret mode, so the wall times measure
+the Pallas interpreter's DMA emulation, not TPU DMA overlap — the
+``est_*_cycles`` / ``predicted_gain`` columns carry the modeled gap the
+pipeline exists to close.  On a TPU host the kernels compile and the wall
+times are real.  ``benchmarks/run.py --only membw`` writes the records to
+``BENCH_membw.json``.
+
+Env: BENCH_SMOKE=0 for full sizes.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_synth import (
+    PIPELINE_GAIN_MIN,
+    choose_flash_blocks,
+    choose_matmul_blocks,
+    choose_ssd_blocks,
+)
+from repro.kernels import ops
+
+# Per-run records for the BENCH_membw.json artifact; populated by run().
+JSON_RECORDS: list[dict] = []
+
+_SMOKE = os.environ.get("BENCH_SMOKE", "1") != "0"
+
+#: Interpret off-TPU (the Pallas interpreter emulates the DMA semaphores);
+#: compile for real on a TPU host so the wall times measure actual overlap.
+_INTERPRET = jax.default_backend() != "tpu"
+
+#: Memory-bound shapes: short query / skinny activation against a long
+#: streamed operand, so DMA bytes dominate the MXU work.  Full sizes stay
+#: modest because off-TPU runs pay interpreter cost per grid step.
+_FLASH_SHAPES = ([(1, 64, 2, 2, 512, 64)] if _SMOKE else
+                 [(1, 128, 4, 4, 1024, 64), (1, 128, 8, 8, 2048, 64)])
+_INT8_SHAPES = ([(32, 256, 8192)] if _SMOKE else
+                [(64, 1024, 8192), (64, 2048, 8192)])
+_SSD_SHAPES = ([(1, 2, 1024, 16, 16)] if _SMOKE else
+               [(1, 4, 2048, 32, 32)])
+
+_RNG = np.random.default_rng(0)
+
+
+def _time(fn, *args, iters: int = 3, **kw) -> tuple[float, np.ndarray]:
+    out = fn(*args, **kw)            # warmup (trace + compile/interpret)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        out.block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, np.asarray(out, np.float32)
+
+
+def _record(kernel: str, shape, sched, pip_us: float, unpip_us: float,
+            max_err: float) -> str:
+    assert sched.pipelined == (sched.pipeline_gain >= PIPELINE_GAIN_MIN
+                               and sched.buffering > 1), (
+        "pipeline must never be auto-selected on a predicted loss")
+    JSON_RECORDS.append({
+        "scenario": f"membw/{kernel}",
+        "shape": list(shape),
+        "pipelined_us": pip_us,
+        "unpipelined_us": unpip_us,
+        "selected": sched.pipelined,
+        # the forced pipelined timing always runs with at least two buffers
+        # (ops.* use max(2, buffering)); record what actually executed
+        "depth": max(2, sched.buffering),
+        "selected_depth": sched.buffering,
+        "predicted_gain": sched.pipeline_gain,
+        "est_pipelined_cycles": sched.est_total_cycles,
+        "est_serial_cycles": sched.est_serial_cycles,
+        "max_abs_err": max_err,
+        "interpret": _INTERPRET,
+    })
+    return (f"membw/{kernel},{unpip_us:.0f},"
+            f"pipelined={pip_us:.0f}us;depth={max(2, sched.buffering)};"
+            f"predicted_gain={sched.pipeline_gain:.2f}x;"
+            f"selected={sched.pipelined};err={max_err:.2e}")
+
+
+def run() -> list[str]:
+    """Sweep pipelined vs unpipelined kernels; returns CSV rows."""
+    rows = []
+    JSON_RECORDS.clear()
+
+    for B, S, H, K, T, hd in _FLASH_SHAPES:
+        q = jnp.asarray(_RNG.normal(size=(B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(_RNG.normal(size=(B, T, K, hd)), jnp.float32)
+        v = jnp.asarray(_RNG.normal(size=(B, T, K, hd)), jnp.float32)
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)[None]
+        sched = choose_flash_blocks(S, T, hd, 4)
+        pip_us, got = _time(ops.flash_attention_gqa, q, k, v, mask,
+                            sm_scale=hd ** -0.5, interpret=_INTERPRET,
+                            pipelined=True)
+        unpip_us, want = _time(ops.flash_attention_gqa, q, k, v, mask,
+                               sm_scale=hd ** -0.5, interpret=_INTERPRET,
+                               pipelined=False)
+        err = float(np.abs(got - want).max())
+        assert err < 1e-5, f"flash pipelined diverged: {err}"
+        rows.append(_record("flash_attention", (B, S, H, K, T, hd), sched,
+                            pip_us, unpip_us, err))
+
+    for M, N, Kd in _INT8_SHAPES:
+        x = jnp.asarray(_RNG.normal(size=(M, Kd)), jnp.float32)
+        wq = jnp.asarray(_RNG.integers(-127, 127, size=(N, Kd)), jnp.int8)
+        sc = jnp.asarray(_RNG.uniform(0.01, 0.02, size=(N,)), jnp.float32)
+        sched = choose_matmul_blocks(M, N, Kd, dtype_bytes=1)
+        pip_us, got = _time(ops.int8_matmul, x, wq, sc, interpret=_INTERPRET,
+                            pipelined=True)
+        unpip_us, want = _time(ops.int8_matmul, x, wq, sc, interpret=_INTERPRET,
+                               pipelined=False)
+        err = float(np.abs(got - want).max())
+        assert err < 1e-4, f"int8 pipelined diverged: {err}"
+        rows.append(_record("int8_matmul", (M, N, Kd), sched,
+                            pip_us, unpip_us, err))
+
+    for BT, H, S, P, N in _SSD_SHAPES:
+        x = jnp.asarray(_RNG.normal(size=(BT, H, S, P)), jnp.float32)
+        dt = jnp.asarray(_RNG.uniform(0.01, 0.1, size=(BT, H, S)),
+                         jnp.float32)
+        A = jnp.asarray(-_RNG.uniform(0.5, 1.5, size=(H,)), jnp.float32)
+        Bm = jnp.asarray(_RNG.normal(size=(BT, S, N)), jnp.float32)
+        Cm = jnp.asarray(_RNG.normal(size=(BT, S, N)), jnp.float32)
+        sched = choose_ssd_blocks(S, H, P, N)
+        pip_us, got = _time(ops.ssd_scan, x, dt, A, Bm, Cm, interpret=_INTERPRET,
+                            pipelined=True)
+        unpip_us, want = _time(ops.ssd_scan, x, dt, A, Bm, Cm,
+                               interpret=_INTERPRET, pipelined=False)
+        err = float(np.abs(got - want).max())
+        assert err < 1e-3, f"ssd pipelined diverged: {err}"
+        rows.append(_record("ssd_scan", (BT, H, S, P, N), sched,
+                            pip_us, unpip_us, err))
+
+    return rows

@@ -4,14 +4,17 @@
     Table 3  → bench_compile_stats (e-graph compilation statistics)
     Fig 2/3  → bench_synthesis     (interface-model decision quality)
     Fig 8    → bench_llm_serve     (LLM TTFT/ITL, int8, continuous batching)
+    §HW mem  → bench_membw         (burst-DMA pipelined vs unpipelined)
     §Roofline→ bench_roofline      (dry-run aggregate)
 
 Prints ``name,us_per_call,derived`` CSV.  Modules with a ``JSON_RECORDS``
 list get their per-scenario records written to a JSON artifact so CI can
 archive the perf trajectory: ``llm_serve`` → ``BENCH_serve.json`` (schema:
-scenario, ttft_s, itl_s, tokens_per_s, …) and ``compile_stats`` →
+scenario, ttft_s, itl_s, tokens_per_s, …), ``compile_stats`` →
 ``BENCH_compile.json`` (Table-3 rows plus the dispatch sweep's ISAX
-match-rate / compile-cache hit-rate).
+match-rate / compile-cache hit-rate / burst-pipeline selections), and
+``membw`` → ``BENCH_membw.json`` (pipelined vs unpipelined time per kernel
+with the cost model's predicted gain).
 
 Env: BENCH_SMOKE=0 for full sizes.  ``--only <name>[,<name>…]`` restricts
 to a subset of modules (e.g. ``--only llm_serve,compile_stats`` in CI).
@@ -27,6 +30,7 @@ import traceback
 ARTIFACTS = {
     "llm_serve": "BENCH_serve.json",
     "compile_stats": "BENCH_compile.json",
+    "membw": "BENCH_membw.json",
 }
 
 
@@ -39,11 +43,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_compile_stats, bench_kernels,
-                            bench_llm_serve, bench_roofline, bench_synthesis)
+                            bench_llm_serve, bench_membw, bench_roofline,
+                            bench_synthesis)
     modules = [
         ("synthesis", bench_synthesis),
         ("kernels", bench_kernels),
         ("compile_stats", bench_compile_stats),
+        ("membw", bench_membw),
         ("llm_serve", bench_llm_serve),
         ("roofline", bench_roofline),
     ]

@@ -37,7 +37,15 @@ def hardware_side():
     sched = choose_flash_blocks(4096, 4096, 128)
     print(f"  flash-attention tiles (synthesized for TPU): "
           f"{sched.block_shapes}, {sched.buffering}-deep buffering, "
-          f"{sched.decisions['bound']}-bound\n")
+          f"{sched.decisions['bound']}-bound")
+    # compute-bound prefill: BlockSpec's implicit double buffering suffices;
+    # memory-bound short-query/long-KV: explicit deep staging wins.
+    for label, s in (("prefill 4k×4k", sched),
+                     ("decode-ish 64×4k", choose_flash_blocks(64, 4096, 64))):
+        print(f"  burst-DMA pipeline [{label}]: {s.decisions['pipeline']} "
+              f"(est {s.est_serial_cycles:.0f} baseline → "
+              f"{s.est_total_cycles:.0f} cycles)")
+    print()
 
 
 def software_side():

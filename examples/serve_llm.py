@@ -11,6 +11,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro.compile import VALID_BACKENDS, LoweringConfig
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
 from repro.serve.engine import ContinuousEngine, ServeEngine
@@ -21,6 +22,9 @@ from repro.train import checkpoint as ckpt
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama110m")
+    ap.add_argument("--backend", default=None, choices=VALID_BACKENDS,
+                    help="kernel lowering backend (default: "
+                         "REPRO_ATTENTION_IMPL env or 'xla')")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -35,6 +39,7 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    lowering = LoweringConfig(backend=args.backend)
     params = None
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         tree, mf = ckpt.load(args.ckpt_dir)
@@ -46,7 +51,7 @@ def main():
 
     for mode, quant in (("fp", False), ("int8", True)):
         eng = ServeEngine(cfg, params=params, max_len=max_len,
-                          quantize=quant)
+                          quantize=quant, lowering=lowering)
         toks, stats = eng.generate({"tokens": prompts}, args.tokens)
         print(f"[{mode:5s}] TTFT {stats.ttft_s * 1e3:8.1f} ms | "
               f"ITL {stats.itl_s * 1e3:7.2f} ms | "
@@ -64,7 +69,7 @@ def main():
     ceng = ContinuousEngine(cfg, params=params, max_batch=args.batch,
                             page_size=16, max_len=cmax_len,
                             prompt_buckets=(16, 32, 64, bucket),
-                            quantize=args.int8)
+                            quantize=args.int8, lowering=lowering)
     host_prompts = np.asarray(prompts, np.int32)
     reqs = [Request(rid=i, prompt=host_prompts[i],
                     max_new_tokens=max(2, args.tokens // (1 + i % 3)),

@@ -83,6 +83,7 @@ _DEFAULT: Optional[LoweringConfig] = None
 
 
 def default_lowering() -> LoweringConfig:
+    """The process-default LoweringConfig (created lazily from the env)."""
     global _DEFAULT
     if _DEFAULT is None:
         _DEFAULT = LoweringConfig()
@@ -107,4 +108,5 @@ def set_default_backend(backend: str) -> str:
 
 
 def get_default_backend() -> str:
+    """Backend name of the process-default LoweringConfig."""
     return default_lowering().backend

@@ -14,6 +14,22 @@ op hit the cache.
 Kernel entry points are resolved here, at dispatch/compile time (module
 import), never lazily inside a forward function: a ``CompileRecord`` carries
 the bound callable.
+
+Invariants:
+
+* **Cache key** — the compile cache is keyed on the full
+  ``OpKey(op, shape, dtype, backend)`` tuple and nothing else; two lookups
+  with equal keys always return the *same* ``CompileRecord`` object, and
+  any input property that should change the lowering (a new shape, a dtype
+  switch, a different backend preference) must be part of the key.
+* **E-graph amortization** — saturation/matching outcomes are memoized per
+  *trace kind* (attention prefill/decode/paged share one run); schedules
+  and impl decisions are per key.  ``lower`` is called at jit-trace time
+  only, so steady-state inference never pays a dispatch cost.
+* **Recorded schedules are the executed schedules** — the schedule dict in
+  a ``CompileRecord`` (tiles, buffer depth, burst-pipeline go/no-go) uses
+  the same ``core.kernel_synth`` entry points the kernel wrappers consult,
+  so what ``BENCH_compile.json`` reports is what the kernel ran.
 """
 
 from __future__ import annotations
@@ -74,9 +90,11 @@ class CompileRecord:
 
     @property
     def target_matched(self) -> bool:
+        """True iff the e-graph pipeline matched this op's target ISAX."""
         return self.target is not None and self.target in self.matched
 
     def row(self) -> dict:
+        """Flatten the record for the ``BENCH_compile.json`` artifact."""
         return {
             "op": self.key.op, "shape": list(self.key.shape),
             "dtype": self.key.dtype, "backend": self.key.backend,
@@ -87,6 +105,17 @@ class CompileRecord:
             "external_rewrites": self.outcome.external_rewrites,
             "saturated_enodes": self.outcome.saturated_enodes,
         }
+
+
+def _pipeline_fields(sched) -> dict:
+    """Burst-DMA pipeline decision recorded in the compile-cache entry (and
+    therefore in ``BENCH_compile.json`` via ``CompileRecord.row``): whether
+    the kernel streams its cold operands through ``kernels/pipeline.py``
+    and the conservatively-predicted gain (the depth is the schedule's
+    ``buffering`` field, recorded alongside)."""
+    return {"pipelined": sched.pipelined,
+            "pipeline_gain": round(sched.pipeline_gain, 3),
+            "est_serial_cycles": sched.est_serial_cycles}
 
 
 def _attention_schedule(key: OpKey):
@@ -107,7 +136,8 @@ def _attention_schedule(key: OpKey):
         return None, f"untileable shape S={S} T={T} H={H} K={K}"
     return ({"block_q": bq, "block_k": bk, "buffering": sched.buffering,
              "est_step_cycles": sched.est_step_cycles,
-             "vmem_bytes": sched.vmem_bytes}, "ok")
+             "vmem_bytes": sched.vmem_bytes,
+             **_pipeline_fields(sched)}, "ok")
 
 
 def _rmsnorm_schedule(key: OpKey):
@@ -124,7 +154,7 @@ def _int8_matmul_schedule(key: OpKey):
     if M % bm or N % bn or Kd % bk:
         return None, f"untileable shape M={M} N={N} K={Kd}"
     return ({"block_m": bm, "block_n": bn, "block_k": bk,
-             "buffering": sched.buffering}, "ok")
+             "buffering": sched.buffering, **_pipeline_fields(sched)}, "ok")
 
 
 def _ssd_schedule(key: OpKey):
@@ -133,7 +163,8 @@ def _ssd_schedule(key: OpKey):
     chunk = _down_pow2(s, sched.block("chunk")[0])
     if s % chunk:
         return None, f"untileable sequence s={s}"
-    return {"chunk": chunk, "buffering": sched.buffering}, "ok"
+    return ({"chunk": chunk, "buffering": sched.buffering,
+             **_pipeline_fields(sched)}, "ok")
 
 
 _SCHEDULERS = {
@@ -164,6 +195,7 @@ class Dispatcher:
     # -- e-graph compilation (per trace kind) ------------------------------
 
     def match_outcome(self, kind: str) -> MatchOutcome:
+        """E-graph saturation + matching for one trace kind (memoized)."""
         out = self._outcomes.get(kind)
         if out is None:
             res = compile_program(trace_term(kind), isax_library(),
@@ -178,6 +210,8 @@ class Dispatcher:
     # -- lowering decision (per key) ---------------------------------------
 
     def lower(self, key: OpKey) -> CompileRecord:
+        """The compile-cache lookup: returns the (memoized) lowering
+        decision for one (op, shape, dtype, backend) key."""
         rec = self.records.get(key)
         if rec is not None:
             self.hits += 1
@@ -193,7 +227,7 @@ class Dispatcher:
         target = TARGET_ISAX[key.op]
         matched = target is not None and target in outcome.matched
 
-        def rec(impl, kernel_fn=None, schedule=None, note=""):
+        def _rec(impl, kernel_fn=None, schedule=None, note=""):
             return CompileRecord(key=key, impl=impl, matched=outcome.matched,
                                  target=target, kernel_fn=kernel_fn,
                                  schedule=schedule, note=note,
@@ -201,22 +235,22 @@ class Dispatcher:
 
         if key.backend in ("pallas", "pallas_interpret"):
             if not matched:
-                return rec("reference",
-                           note="no ISAX matched; XLA reference")
+                return _rec("reference",
+                            note="no ISAX matched; XLA reference")
             schedule, why = _SCHEDULERS[key.op](key)
             if schedule is None:
-                return rec("reference",
-                           note=f"{target} matched but {why}; XLA reference")
-            return rec("isax", kernel_fn=_KERNELS[target],
-                       schedule=schedule, note=f"extracted isax:{target}")
+                return _rec("reference",
+                            note=f"{target} matched but {why}; XLA reference")
+            return _rec("isax", kernel_fn=_KERNELS[target],
+                        schedule=schedule, note=f"extracted isax:{target}")
         if key.backend == "xla_chunked" and key.op.startswith("attention"):
             B, S = key.shape[0], key.shape[1]
             if S > 1:
-                return rec("chunked",
-                           note="online-softmax chunked XLA lowering")
-            return rec("reference", note="single-row query; XLA reference")
-        return rec("reference", note=f"backend {key.backend}: XLA reference"
-                   + ("" if not matched else f" ({target} matched)"))
+                return _rec("chunked",
+                            note="online-softmax chunked XLA lowering")
+            return _rec("reference", note="single-row query; XLA reference")
+        return _rec("reference", note=f"backend {key.backend}: XLA reference"
+                    + ("" if not matched else f" ({target} matched)"))
 
     # -- introspection ------------------------------------------------------
 
@@ -227,11 +261,14 @@ class Dispatcher:
         n = len(recs)
         matched = sum(1 for r in recs if r.target_matched)
         isax = sum(1 for r in recs if r.impl == "isax")
+        pipelined = sum(1 for r in recs
+                        if r.schedule and r.schedule.get("pipelined"))
         lookups = self.hits + self.misses
         return {
             "n_keys": n,
             "matched_keys": matched,
             "isax_keys": isax,
+            "pipelined_keys": pipelined,
             "match_rate": matched / n if n else 0.0,
             "isax_rate": isax / n if n else 0.0,
             "cache_hits": self.hits,

@@ -72,6 +72,8 @@ class OpKey:
 
 
 def trace_kind(op: str) -> str:
+    """Trace kind an op's e-graph outcome is memoized under (attention
+    prefill/decode/paged all share the ``attention`` saturation run)."""
     return _TRACE_KIND[op]
 
 

@@ -32,15 +32,41 @@ from repro.core.interface_model import (
     tpu_interfaces,
 )
 from repro.core.synthesis import synthesize
+from repro.roofline.analysis import pipeline_speedup
 
 # MXU does a 128x128x128 bf16 matmul-accumulate per ~1 cycle equivalent:
 _MXU_FLOPS_PER_CYCLE = TPU_PEAK_FLOPS_BF16 / TPU_CLOCK_HZ  # ≈ 123k flops/cycle
 _VPU_FLOPS_PER_CYCLE = 8 * 128 * 2  # elementwise lanes
 
+#: Candidate burst-DMA buffer depths; 1 = plain BlockSpec streaming (no
+#: manual pipeline), >1 = `kernels/pipeline.py` multi-buffering.
+PIPELINE_DEPTHS = (1, 2, 3, 4)
+
+#: Mosaic automatically double-buffers BlockSpec operands across grid
+#: steps, so the *baseline* kernel is already overlap-2 — the explicit
+#: burst pipeline only wins where deeper staging (up to the interface's
+#: in-flight window I) hides more latency than that.  Modeling the
+#: baseline as serialized would measure the pipeline against a strawman.
+BASELINE_OVERLAP = 2
+
+#: Minimum conservatively-predicted speedup before the burst pipeline is
+#: auto-selected — below this the extra VMEM and semaphore traffic isn't
+#: worth it, and the kernel runs the plain BlockSpec path.
+PIPELINE_GAIN_MIN = 1.02
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelSchedule:
-    """Synthesized schedule consumed by the Pallas kernels."""
+    """Synthesized schedule consumed by the Pallas kernels.
+
+    ``buffering`` is the burst-DMA pipeline depth (1 = plain BlockSpec
+    streaming, itself implicitly overlap-2 — see ``BASELINE_OVERLAP``);
+    ``pipelined`` is the go/no-go decision after comparing the
+    interface-model estimate against that baseline AND the roofline overlap
+    bound (the conservative minimum of the two — ``pipeline_gain``).
+    ``est_serial_cycles`` is the BlockSpec-baseline cost of the same tiling,
+    so consumers can report the predicted win.
+    """
 
     name: str
     block_shapes: dict[str, tuple[int, ...]]
@@ -49,9 +75,61 @@ class KernelSchedule:
     est_total_cycles: float
     vmem_bytes: int
     decisions: dict[str, str]
+    pipelined: bool = False
+    est_serial_cycles: float = 0.0
+    pipeline_gain: float = 1.0
 
     def block(self, key: str) -> tuple[int, ...]:
+        """Tile shape chosen for buffer ``key`` (e.g. ``"kv"``, ``"a"``)."""
         return self.block_shapes[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class _PipeCost:
+    """Cost of one (tiling, depth) candidate under the pipeline model."""
+
+    step: float
+    total: float
+    serial_total: float
+    pipelined: bool
+    gain: float
+
+
+def _pipeline_cost(compute: float, dma: float, buf: int, steps: int,
+                   flops_per_step: float, bytes_per_step: float,
+                   itfc: MemInterface) -> _PipeCost:
+    """Burst-pipeline vs BlockSpec-baseline step cost for one candidate.
+
+    depth 1: the BlockSpec baseline — Mosaic's implicit double buffering
+    already overlaps at ``BASELINE_OVERLAP``, so a step costs
+    ``max(compute, dma / 2)``.  depth > 1: the explicit pipeline keeps up
+    to ``min(I, depth)`` copies in flight — ``max(compute, dma/overlap)``.
+    Both pay one pipeline-fill DMA per sweep.  The decision gain is the
+    *minimum* of the interface-model ratio and the roofline overlap bound
+    (``roofline.analysis.pipeline_speedup``), so a predicted loss under
+    either model keeps the kernel on the plain path; a depth-2 explicit
+    pipeline can never beat the baseline (same overlap), which is exactly
+    right — it would replicate what BlockSpec already does.
+    """
+    base_step = max(compute, dma / min(itfc.I, BASELINE_OVERLAP))
+    base_total = base_step * steps + dma
+    if buf == 1:
+        return _PipeCost(base_step, base_total, base_total, False, 1.0)
+    overlap = min(itfc.I, buf)
+    step = max(compute, dma / overlap)
+    total = step * steps + dma
+    gain_model = base_total / total if total > 0 else 1.0
+    gain_roofline = pipeline_speedup(flops_per_step * steps,
+                                     bytes_per_step * steps)
+    gain = min(gain_model, gain_roofline)
+    pipelined = steps >= 2 and gain >= PIPELINE_GAIN_MIN
+    return _PipeCost(step, total, base_total, pipelined, gain)
+
+
+def _pipe_note(cost: _PipeCost, buf: int) -> str:
+    if not cost.pipelined:
+        return "off"
+    return f"burst(depth={buf},gain={cost.gain:.2f}x)"
 
 
 def _round_to(x: int, mult: int) -> int:
@@ -110,36 +188,48 @@ def choose_matmul_blocks(
     for bm in _candidate_tiles(m, sub, (128, 256, 512)):
         for bn in _candidate_tiles(n, MXU_DIM, (128, 256, 512, 1024)):
             for bk in _candidate_tiles(k, MXU_DIM, (128, 256, 512, 1024, 2048)):
-                for buf in (2, 3):
+                for buf in PIPELINE_DEPTHS:
                     a_b = bm * bk * dtype_bytes
                     b_b = bk * bn * dtype_bytes
                     c_b = bm * bn * acc_bytes
-                    vmem = buf * (a_b + b_b) + c_b
+                    # even the depth-1 baseline holds BASELINE_OVERLAP copies
+                    # of each streamed tile (Mosaic double-buffers BlockSpecs)
+                    n_bufs = max(buf, BASELINE_OVERLAP)
+                    vmem = n_bufs * (a_b + b_b) + c_b
                     if vmem > vmem_budget:
                         continue
-                    steps = (math.ceil(m / bm) * math.ceil(n / bn)
-                             * math.ceil(k / bk))
+                    # The burst pipeline streams within one (mi, ni) k-sweep;
+                    # each sweep re-pays the pipeline fill.
+                    k_steps = math.ceil(k / bk)
+                    mn_sweeps = math.ceil(m / bm) * math.ceil(n / bn)
                     dma = _dma_cycles("gemm_step",
                                       [("a_tile", a_b, "load"),
                                        ("b_tile", b_b, "load")])
                     compute = 2 * bm * bn * bk / _MXU_FLOPS_PER_CYCLE
-                    overlap = min(itfc.I, buf)
-                    step = max(compute, dma / overlap)
-                    total = step * steps + dma  # + pipeline fill
+                    cost = _pipeline_cost(compute, dma, buf, k_steps,
+                                          2 * bm * bn * bk, a_b + b_b, itfc)
+                    if buf > 1 and not cost.pipelined:
+                        continue  # deeper staging predicted not to pay off
+                    total = cost.total * mn_sweeps
                     if best is None or total < best.est_total_cycles:
                         best = KernelSchedule(
                             name="matmul",
                             block_shapes={"a": (bm, bk), "b": (bk, bn),
                                           "c": (bm, bn)},
                             buffering=buf,
-                            est_step_cycles=step,
+                            est_step_cycles=cost.step,
                             est_total_cycles=total,
                             vmem_bytes=vmem,
                             decisions={
-                                "bound": "compute" if compute >= dma / overlap
+                                "bound": "compute"
+                                         if cost.step <= compute * (1 + 1e-9)
                                          else "memory",
-                                "steps": str(steps),
-                            })
+                                "steps": str(k_steps * mn_sweeps),
+                                "pipeline": _pipe_note(cost, buf),
+                            },
+                            pipelined=cost.pipelined,
+                            est_serial_cycles=cost.serial_total * mn_sweeps,
+                            pipeline_gain=cost.gain)
     assert best is not None, "no feasible matmul tiling"
     return best
 
@@ -160,14 +250,16 @@ def choose_flash_blocks(
     """
     best: KernelSchedule | None = None
     hd = max(head_dim, MXU_DIM)  # lane-padded head dim
+    itfc = tpu_interfaces()["hbm_vmem"]
     for bq in _candidate_tiles(seq_q, 8, (128, 256, 512, 1024)):
         for bk in _candidate_tiles(seq_k, MXU_DIM, (128, 256, 512, 1024)):
-            for buf in (2, 3):
+            for buf in PIPELINE_DEPTHS:
                 q_b = bq * hd * dtype_bytes
                 kv_b = 2 * bk * hd * dtype_bytes
                 o_b = bq * hd * 4
                 s_b = bq * bk * 4
-                vmem = q_b + buf * kv_b + o_b + s_b + bq * 4 * 2
+                n_bufs = max(buf, BASELINE_OVERLAP)
+                vmem = q_b + n_bufs * kv_b + o_b + s_b + bq * 4 * 2
                 if vmem > vmem_budget:
                     continue
                 kv_steps = math.ceil(seq_k / bk)
@@ -176,23 +268,30 @@ def choose_flash_blocks(
                 flops = 2 * bq * bk * hd * 2 + 5 * bq * bk  # qk + pv + softmax
                 compute = (4 * bq * bk * hd / _MXU_FLOPS_PER_CYCLE
                            + 5 * bq * bk / _VPU_FLOPS_PER_CYCLE)
-                overlap = min(tpu_interfaces()["hbm_vmem"].I, buf)
-                step = max(compute, dma / overlap)
-                total = (step * kv_steps + dma) * q_steps
+                cost = _pipeline_cost(compute, dma, buf, kv_steps,
+                                      flops, kv_b, itfc)
+                if buf > 1 and not cost.pipelined:
+                    continue
+                total = cost.total * q_steps
                 if best is None or total < best.est_total_cycles:
                     best = KernelSchedule(
                         name="flash_attention",
                         block_shapes={"q": (bq, head_dim), "kv": (bk, head_dim)},
                         buffering=buf,
-                        est_step_cycles=step,
+                        est_step_cycles=cost.step,
                         est_total_cycles=total,
                         vmem_bytes=vmem,
                         decisions={
-                            "bound": "compute" if compute >= dma / overlap
+                            "bound": "compute"
+                                     if cost.step <= compute * (1 + 1e-9)
                                      else "memory",
                             "kv_steps": str(kv_steps),
                             "q_hint": "warm", "kv_hint": "cold",
-                        })
+                            "pipeline": _pipe_note(cost, buf),
+                        },
+                        pipelined=cost.pipelined,
+                        est_serial_cycles=cost.serial_total * q_steps,
+                        pipeline_gain=cost.gain)
     assert best is not None, "no feasible flash tiling"
     return best
 
@@ -213,35 +312,44 @@ def choose_ssd_blocks(
     update linear — the model balances the two against DMA.
     """
     best: KernelSchedule | None = None
+    itfc = tpu_interfaces()["hbm_vmem"]
     for chunk in (128, 256, 512):
         if chunk > seq:
             chunk = seq
-        for buf in (2, 3):
+        for buf in PIPELINE_DEPTHS:
             x_b = chunk * head_dim * dtype_bytes
             bc_b = 2 * chunk * d_state * dtype_bytes
             state_b = head_dim * d_state * 4
-            vmem = buf * (x_b + bc_b) + state_b + chunk * chunk * 4
+            n_bufs = max(buf, BASELINE_OVERLAP)
+            vmem = n_bufs * (x_b + bc_b) + state_b + chunk * chunk * 4
             if vmem > vmem_budget:
                 continue
             steps = math.ceil(seq / chunk)
             dma = _dma_cycles("ssd_step", [("x", x_b, "load"),
                                            ("bc", bc_b, "load")])
-            compute = (2 * chunk * chunk * head_dim
-                       + 4 * chunk * head_dim * d_state) / _MXU_FLOPS_PER_CYCLE
-            overlap = min(tpu_interfaces()["hbm_vmem"].I, buf)
-            step = max(compute, dma / overlap)
-            total = step * steps + dma
-            if best is None or total < best.est_total_cycles:
+            flops = (2 * chunk * chunk * head_dim
+                     + 4 * chunk * head_dim * d_state)
+            compute = flops / _MXU_FLOPS_PER_CYCLE
+            cost = _pipeline_cost(compute, dma, buf, steps,
+                                  flops, x_b + bc_b, itfc)
+            if buf > 1 and not cost.pipelined:
+                continue
+            if best is None or cost.total < best.est_total_cycles:
                 best = KernelSchedule(
                     name="ssd_scan",
                     block_shapes={"chunk": (chunk, head_dim),
                                   "state": (head_dim, d_state)},
                     buffering=buf,
-                    est_step_cycles=step,
-                    est_total_cycles=total,
+                    est_step_cycles=cost.step,
+                    est_total_cycles=cost.total,
                     vmem_bytes=vmem,
-                    decisions={"bound": "compute" if compute >= dma / overlap
+                    decisions={"bound": "compute"
+                               if cost.step <= compute * (1 + 1e-9)
                                else "memory",
-                               "chunks": str(steps)})
+                               "chunks": str(steps),
+                               "pipeline": _pipe_note(cost, buf)},
+                    pipelined=cost.pipelined,
+                    est_serial_cycles=cost.serial_total,
+                    pipeline_gain=cost.gain)
     assert best is not None, "no feasible ssd tiling"
     return best

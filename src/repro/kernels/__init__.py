@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+One module per ISAX (``flash_attention``, ``int8_matmul``, ``rmsnorm``,
+``ssd_scan``) plus ``pipeline`` (the burst-DMA multi-buffered variants of
+the streaming kernels), ``ops`` (the public schedule-aware wrappers the
+dispatcher binds) and ``ref`` (pure-jnp oracles every kernel is tested
+against in interpret mode)."""

@@ -10,6 +10,12 @@ Layout: q (B, S, H, hd), k/v (B, T, K, hd) with GQA head folding h → h // G
 in the BlockSpec index map.  Grid (B, H, nq, nk): the last grid dim iterates
 sequentially on TPU, so the running max / denominator / output accumulator
 live in VMEM scratch and are re-initialized at nk == 0.
+
+This is the *unpipelined* baseline: K/V stream through BlockSpec copies.
+``kernels.pipeline.flash_attention_pipelined`` is the burst-DMA variant
+(explicit multi-buffered ``make_async_copy`` K/V streaming); the
+``ops.flash_attention_gqa`` wrapper routes between them on the synthesized
+cost-model decision.
 """
 
 from __future__ import annotations
@@ -24,47 +30,60 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _init_flash_scratch(m_scr, l_scr, acc_scr):
+    """Reset the online-softmax running stats at the start of a kv sweep."""
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _online_softmax_update(q, k, v, mask, sm_scale,
+                           m_scr, l_scr, acc_scr):
+    """One flash tile update: masked scores → online softmax → scratch.
+
+    ``q``/``k``/``v`` are f32 tiles, ``mask`` (bq, bk) bool.  Shared by the
+    BlockSpec baseline, the int8-KV variant, and the burst-DMA pipelined
+    kernel (``kernels/pipeline.py``) so the numerically delicate masked-row
+    handling lives in exactly one place.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]                              # (bq,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # guard fully-masked rows (m == NEG_INF): exp(NEG_INF - NEG_INF) = 1
+    # would pollute l; use alpha = exp(m_prev - m_new) with masked-safe forms.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _finalize_flash_output(o_ref, l_scr, acc_scr):
+    """Divide the accumulator by the running denominator (masked-row safe)."""
+    denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+    o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, sm_scale: float, n_kv: int):
     ki = pl.program_id(3)
 
     @pl.when(ki == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _init_flash_scratch(m_scr, l_scr, acc_scr)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, hd)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
-    mask = mask_ref[0, :, :]                         # (bq, bk) bool
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s * sm_scale
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[...]                              # (bq,)
-    m_cur = jnp.max(s, axis=-1)
-    m_new = jnp.maximum(m_prev, m_cur)
-    # guard fully-masked rows (m == NEG_INF): exp(NEG_INF - NEG_INF) = 1
-    # would pollute l; use alpha = exp(m_prev - m_new) with masked-safe forms.
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(mask, p, 0.0)
-
-    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1)
-    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-
-    m_scr[...] = m_new
-    l_scr[...] = l_new
-    acc_scr[...] = acc
+    _online_softmax_update(
+        q_ref[0, :, 0, :].astype(jnp.float32),       # (bq, hd)
+        k_ref[0, :, 0, :].astype(jnp.float32),       # (bk, hd)
+        v_ref[0, :, 0, :].astype(jnp.float32),       # (bk, hd)
+        mask_ref[0, :, :], sm_scale, m_scr, l_scr, acc_scr)
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
-        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
-        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        _finalize_flash_output(o_ref, l_scr, acc_scr)
 
 
 def _flash_kernel_int8kv(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
@@ -78,31 +97,17 @@ def _flash_kernel_int8kv(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref,
 
     @pl.when(ki == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _init_flash_scratch(m_scr, l_scr, acc_scr)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)
-    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0]
-    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0]
-    mask = mask_ref[0, :, :]
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale
-    s = jnp.where(mask, s, NEG_INF)
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
-    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    _online_softmax_update(
+        q_ref[0, :, 0, :].astype(jnp.float32),
+        k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0],
+        v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0],
+        mask_ref[0, :, :], sm_scale, m_scr, l_scr, acc_scr)
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
-        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
-        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        _finalize_flash_output(o_ref, l_scr, acc_scr)
 
 
 def flash_attention_int8kv(q, k8, v8, k_scale, v_scale, mask, *,

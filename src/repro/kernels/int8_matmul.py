@@ -8,6 +8,11 @@ model rewards).
 
 Grid (nm, nn, nk): accumulate in f32 VMEM scratch over the sequential k dim.
 Tile shapes come from ``core.kernel_synth.choose_matmul_blocks``.
+
+This is the *unpipelined* baseline: tiles stream through BlockSpec copies.
+``kernels.pipeline.int8_matmul_pipelined`` is the burst-DMA variant; the
+``ops.int8_matmul`` wrapper routes between them on the synthesized
+cost-model decision.
 """
 
 from __future__ import annotations

@@ -27,6 +27,11 @@ from repro.core.kernel_synth import (
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8mm
+from repro.kernels.pipeline import (
+    flash_attention_pipelined as _flash_pipe,
+    int8_matmul_pipelined as _int8mm_pipe,
+    ssd_scan_pipelined as _ssd_pipe,
+)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -34,6 +39,25 @@ from repro.kernels.ssd_scan import ssd_scan as _ssd
 @functools.lru_cache(maxsize=None)
 def _flash_schedule(S: int, T: int, hd: int, dtype_bytes: int):
     return choose_flash_blocks(S, T, hd, dtype_bytes)
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul_schedule(M: int, N: int, K: int, dtype_bytes: int):
+    return choose_matmul_blocks(M, N, K, dtype_bytes=dtype_bytes)
+
+
+@functools.lru_cache(maxsize=None)
+def _ssd_schedule(S: int, H: int, P: int, N: int):
+    return choose_ssd_blocks(S, H, P, N)
+
+
+def _use_pipeline(sched, override, n_steps: int) -> bool:
+    """Burst-pipeline routing: the synthesized go/no-go decision unless the
+    caller forces it (``override``); a single streamed tile can never
+    overlap, so it always takes the plain path."""
+    if n_steps < 2:
+        return False
+    return sched.pipelined if override is None else bool(override)
 
 
 def _down_pow2(n: int, cap: int) -> int:
@@ -45,9 +69,12 @@ def _down_pow2(n: int, cap: int) -> int:
 
 
 def flash_attention_gqa(q, k, v, mask, *, sm_scale: float,
-                        interpret: bool = False):
+                        interpret: bool = False,
+                        pipelined: bool | None = None):
     """Drop-in for layers._sdpa: synthesis-chosen tiles, ref fallback for
-    shapes the kernel can't tile (tiny smoke shapes)."""
+    shapes the kernel can't tile (tiny smoke shapes).  ``pipelined`` routes
+    K/V streaming through the burst-DMA pipeline (None = the synthesized
+    cost-model decision)."""
     B, S, H, hd = q.shape
     T = k.shape[1]
     sched = _flash_schedule(S, T, hd, q.dtype.itemsize)
@@ -56,34 +83,54 @@ def flash_attention_gqa(q, k, v, mask, *, sm_scale: float,
     if S % bq or T % bk or H % k.shape[2]:
         return ref.flash_attention_ref(q, k, v, mask, sm_scale=sm_scale)
     mask = jnp.broadcast_to(mask, (mask.shape[0], S, T))
+    if _use_pipeline(sched, pipelined, T // bk):
+        return _flash_pipe(q, k, v, mask, sm_scale=sm_scale, block_q=bq,
+                           block_k=bk, depth=max(2, sched.buffering),
+                           interpret=interpret)
     return _flash(q, k, v, mask, sm_scale=sm_scale, block_q=bq, block_k=bk,
                   interpret=interpret)
 
 
-def int8_matmul(x, wq, scale, *, interpret: bool = False):
+def int8_matmul(x, wq, scale, *, interpret: bool = False,
+                pipelined: bool | None = None):
+    """Quantized GEMM with synthesis-chosen tiles; ``pipelined`` routes the
+    int8 weight (and activation) tiles through the burst-DMA pipeline
+    (None = the synthesized cost-model decision)."""
     M, K = x.shape
     N = wq.shape[0]
-    sched = choose_matmul_blocks(M, N, K, dtype_bytes=1)
+    sched = _matmul_schedule(M, N, K, 1)
     bm = _down_pow2(M, sched.block("a")[0])
     bn = _down_pow2(N, sched.block("b")[1])
     bk = _down_pow2(K, sched.block("a")[1])
     if M % bm or N % bn or K % bk:
         return ref.int8_matmul_ref(x, wq, scale)
+    if _use_pipeline(sched, pipelined, K // bk):
+        return _int8mm_pipe(x, wq, scale, block_m=bm, block_n=bn,
+                            block_k=bk, depth=max(2, sched.buffering),
+                            interpret=interpret)
     return _int8mm(x, wq, scale, block_m=bm, block_n=bn, block_k=bk,
                    interpret=interpret)
 
 
-def ssd_scan(x, dt, A, B, C, *, interpret: bool = False):
+def ssd_scan(x, dt, A, B, C, *, interpret: bool = False,
+             pipelined: bool | None = None):
+    """SSD chunked scan with synthesis-chosen chunk length; ``pipelined``
+    streams the x/B/C chunks through the burst-DMA pipeline (None = the
+    synthesized cost-model decision)."""
     BT, H, S, P = x.shape
     N = B.shape[-1]
-    sched = choose_ssd_blocks(S, H, P, N)
+    sched = _ssd_schedule(S, H, P, N)
     chunk = _down_pow2(S, sched.block("chunk")[0])
     if S % chunk:
         return ref.ssd_scan_ref(x, dt, A, B, C)
+    if _use_pipeline(sched, pipelined, S // chunk):
+        return _ssd_pipe(x, dt, A, B, C, chunk=chunk,
+                         depth=max(2, sched.buffering), interpret=interpret)
     return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
 
 
 def rmsnorm(x, g, *, eps: float = 1e-6, interpret: bool = False):
+    """Row-blocked RMSNorm: x (R,d), g (d) → (R,d)."""
     R = x.shape[0]
     br = _down_pow2(R, 256)
     return _rmsnorm(x, g, eps=eps, block_rows=br, interpret=interpret)
@@ -108,9 +155,9 @@ def _as_f32(a):
 
 @functools.lru_cache(maxsize=None)
 def _jit_flash():
-    def f(q, k, v, mask, scale):
+    def _f(q, k, v, mask, scale):
         return ref.flash_attention_ref(q, k, v, mask, sm_scale=scale)
-    return jax.jit(f, static_argnums=(4,))
+    return jax.jit(_f, static_argnums=(4,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -126,14 +173,14 @@ def _jit_rms():
 
 @functools.lru_cache(maxsize=None)
 def _jit_ssd_seq():
-    def f(a, B, C, X, h0):
+    def _f(a, B, C, X, h0):
         # per-step decay recurrence (evaluator layout: a_t scalar per step)
-        def step(h, inp):
+        def _step(h, inp):
             a_t, b_t, c_t, x_t = inp
             h = a_t * h + jnp.outer(b_t, x_t)
             return h, h.T @ c_t
-        return jax.lax.scan(step, h0, (a, B, C, X))
-    return jax.jit(f)
+        return jax.lax.scan(_step, h0, (a, B, C, X))
+    return jax.jit(_f)
 
 
 def _intr_flash(Q, K, V, scale, n_q, P, O):
@@ -183,6 +230,7 @@ def _intr_rmsnorm(Xn, G, eps, n, On):
 
 
 def register_kernel_intrinsics() -> None:
+    """Register the e-graph intrinsics backed by these kernel datapaths."""
     from repro.core import offload
     offload.register_intrinsic("flash_attention", _intr_flash)
     offload.register_intrinsic("int8_matvec", _intr_int8_matvec)

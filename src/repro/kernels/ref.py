@@ -35,7 +35,7 @@ def ssd_scan_ref(x, dt, A, B, C):
     """Naive recurrence.  x: (BT,H,S,P), dt: (BT,H,S), A: (H,), B/C: (BT,S,N)."""
     BT, H, S, P = x.shape
 
-    def step(h, inputs):
+    def _step(h, inputs):
         x_t, dt_t, b_t, c_t = inputs  # (BT,H,P), (BT,H), (BT,N), (BT,N)
         decay = jnp.exp(dt_t * A[None, :])                     # (BT,H)
         h = (decay[..., None, None] * h
@@ -48,11 +48,12 @@ def ssd_scan_ref(x, dt, A, B, C):
           dt.transpose(2, 0, 1).astype(jnp.float32),
           B.transpose(1, 0, 2).astype(jnp.float32),
           C.transpose(1, 0, 2).astype(jnp.float32))
-    _, ys = jax.lax.scan(step, h0, xs)
+    _, ys = jax.lax.scan(_step, h0, xs)
     return ys.transpose(1, 2, 0, 3).astype(x.dtype)  # (BT,H,S,P)
 
 
 def rmsnorm_ref(x, g, *, eps: float = 1e-6):
+    """RMSNorm oracle: x (R,d) · rsqrt(mean(x²)) · g, computed in f32."""
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)

@@ -11,6 +11,11 @@ the inter-chunk contribution from the running state, then updates the state:
 The (N, P) running state lives in VMEM scratch across the sequential chunk
 grid dim — the "warm" buffer of the interface model; x/B/C/dt chunks stream
 as "cold" tiles.  Chunk length from ``core.kernel_synth.choose_ssd_blocks``.
+
+This is the *unpipelined* baseline: chunks stream through BlockSpec copies.
+``kernels.pipeline.ssd_scan_pipelined`` is the burst-DMA variant; the
+``ops.ssd_scan`` wrapper routes between them on the synthesized cost-model
+decision.
 """
 
 from __future__ import annotations

@@ -138,6 +138,25 @@ def parse_collectives(hlo_text: str, n_chips: int,
     return CollectiveStats(counts, rbytes, wire, in_loop)
 
 
+def pipeline_speedup(flops: float, hbm_bytes: float,
+                     n_chips: int = 1) -> float:
+    """Roofline-level speedup bound for overlapping HBM streaming with
+    compute (the burst-DMA pipeline of ``kernels/pipeline.py``).
+
+    Serialized execution pays ``compute_s + memory_s``; a perfectly
+    overlapped pipeline pays ``max(compute_s, memory_s)``.  The ratio is the
+    best case any buffer depth can reach — ``core.kernel_synth`` takes the
+    minimum of this bound and its interface-model estimate, so the pipelined
+    kernel is never auto-selected on a predicted loss.
+    """
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (n_chips * HBM_BW)
+    overlapped = max(compute_s, memory_s)
+    if overlapped <= 0:
+        return 1.0
+    return (compute_s + memory_s) / overlapped
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float

@@ -46,6 +46,8 @@ from repro.serve.scheduler import (Request, RequestQueue, Scheduler,
 
 @dataclasses.dataclass
 class ServeStats:
+    """Latency/throughput stats for one static-batch generation."""
+
     ttft_s: float
     itl_s: float
     tokens: int
@@ -56,7 +58,7 @@ def quantize_params_int8(params):
     """Per-tensor symmetric int8 quantization of every ≥2-D weight; returns
     (quantized tree with {'q','scale'} leaves, dequant function)."""
 
-    def quant(p):
+    def _quant(p):
         if p.ndim >= 2:
             scale = jnp.maximum(jnp.max(jnp.abs(p.astype(jnp.float32))),
                                 1e-12) / 127.0
@@ -65,26 +67,27 @@ def quantize_params_int8(params):
             return {"q": q, "scale": scale, "dtype": str(p.dtype)}
         return p
 
-    def is_weight(x):
+    def _is_weight(x):
         return isinstance(x, jax.Array)
 
-    qtree = jax.tree.map(quant, params, is_leaf=is_weight)
+    qtree = jax.tree.map(_quant, params, is_leaf=_is_weight)
 
-    def dequant(tree):
-        def deq(x):
+    def _dequant(tree):
+        def _deq(x):
             if isinstance(x, dict) and "q" in x:
                 return (x["q"].astype(jnp.float32) * x["scale"]).astype(
                     L.dtype_of(x["dtype"]) if isinstance(x["dtype"], str)
                     else jnp.float32)
             return x
-        return jax.tree.map(deq, tree,
+        return jax.tree.map(_deq, tree,
                             is_leaf=lambda x: isinstance(x, dict)
                             and "q" in x)
 
-    return qtree, dequant
+    return qtree, _dequant
 
 
 def quantization_error(params, qtree, dequant) -> float:
+    """Mean relative L1 error of the int8 round-trip over all weights."""
     deq = dequant(qtree)
     num = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
                                     - b.astype(jnp.float32))))
@@ -94,6 +97,10 @@ def quantization_error(params, qtree, dequant) -> float:
 
 
 class ServeEngine:
+    """Single-batch prefill + decode engine over a monolithic KV cache —
+    the TTFT/ITL measurement harness and the numerics reference the other
+    engines are checked against."""
+
     def __init__(self, model_cfg: ModelConfig, params=None, *,
                  max_len: int = 512, quantize: bool = False, seed: int = 0,
                  lowering: Optional[LoweringConfig] = None):
@@ -115,6 +122,8 @@ class ServeEngine:
 
     def generate(self, batch: dict, n_tokens: int,
                  greedy: bool = True) -> tuple[np.ndarray, ServeStats]:
+        """Prefill ``batch`` and greedily decode ``n_tokens`` tokens;
+        returns ``(tokens (B, n_tokens), ServeStats)``."""
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, batch)
         logits.block_until_ready()
@@ -145,6 +154,8 @@ class ServeEngine:
 
 @dataclasses.dataclass
 class WorkloadStats:
+    """Aggregate latency/throughput over one served request workload."""
+
     n_requests: int
     total_tokens: int
     wall_s: float
@@ -322,6 +333,8 @@ class ContinuousEngine:
     # -- public API --------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        """Queue a request, rejecting one that could never be admitted
+        (lifetime exceeding ``max_len`` or the whole page pool)."""
         bucket = pick_bucket(req.prompt_len, self.prompt_buckets)
         lifetime = self._lifetime_tokens(req, bucket)
         if lifetime > self.max_len:
@@ -337,6 +350,7 @@ class ContinuousEngine:
         self.queue.push(req)
 
     def run(self, requests: list[Request]) -> WorkloadStats:
+        """Serve a whole workload to completion; asserts no page leaked."""
         for r in requests:
             self.submit(r)
         # Arrival steps are relative to workload start; a reused engine must
@@ -383,6 +397,7 @@ class StaticBatchEngine:
         self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
 
     def run(self, requests: list[Request]) -> WorkloadStats:
+        """Serve a workload in static groups (the baseline scheduler)."""
         queue = RequestQueue()
         for r in requests:
             queue.push(r)

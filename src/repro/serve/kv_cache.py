@@ -15,6 +15,23 @@ come and go — only the table/length *contents* change.
 
 ``PageAllocator`` is pure host-side bookkeeping (free list with double-free
 and leak detection); ``PagedKVCache`` owns the device pools plus the table.
+
+Invariants:
+
+* **Page ownership** — every physical page is either on the allocator's
+  free list or owned by exactly one slot (``_slot_pages``).  ``bind_slot``
+  reserves a request's whole lifetime up front (prompt bucket + max new
+  tokens), so decode can never fail mid-flight; ``release_slot`` is the
+  only way pages return to the pool.
+* **Free-list discipline** — ``free`` rejects double-frees and foreign
+  pages; ``check_leaks`` asserts the pool is exactly full once no request
+  is live (the continuous engine calls it after every workload).
+* **Snapshot before transfer** — ``device_views`` copies the host-side
+  ``page_table``/``seq_lens`` *before* handing them to ``jnp.asarray``:
+  the host→device copy is asynchronous, and engines mutate those arrays
+  immediately after dispatching a decode step.  Mutating the un-snapshotted
+  array races the in-flight transfer and intermittently corrupts the
+  step's lengths (the PR-2 race fix — keep the ``.copy()``).
 """
 
 from __future__ import annotations
@@ -48,12 +65,16 @@ class PageAllocator:
 
     @property
     def n_free(self) -> int:
+        """Number of pages currently on the free list."""
         return len(self._free)
 
     def can_alloc(self, n: int) -> bool:
+        """True iff ``n`` pages can be allocated without failing."""
         return n <= len(self._free)
 
     def alloc(self, n: int) -> list[int]:
+        """Take ``n`` pages off the free list (all-or-nothing); raises
+        ``PageAllocationError`` when the pool can't cover the request."""
         if n > len(self._free):
             raise PageAllocationError(
                 f"requested {n} pages, only {len(self._free)} free "
@@ -63,6 +84,8 @@ class PageAllocator:
         return pages
 
     def free(self, pages: list[int]) -> None:
+        """Return pages to the free list; raises ``PageAllocationError`` on
+        a double-free or a page the allocator never handed out."""
         for p in pages:
             if p not in self._allocated:
                 raise PageAllocationError(
@@ -71,6 +94,8 @@ class PageAllocator:
             self._free.append(p)
 
     def check_invariants(self) -> None:
+        """Assert the free list and allocated set exactly partition the
+        pool (no leak, no duplicate, no page in both states)."""
         assert len(self._free) + len(self._allocated) == self.n_pages, (
             f"page leak: {len(self._free)} free + "
             f"{len(self._allocated)} allocated != {self.n_pages}")
@@ -79,6 +104,8 @@ class PageAllocator:
             "page simultaneously free and allocated")
 
     def check_leaks(self) -> None:
+        """Assert the pool is exactly full again — call once no request is
+        live (every retire path must have freed its pages)."""
         self.check_invariants()
         assert not self._allocated, (
             f"{len(self._allocated)} pages leaked: "
@@ -115,9 +142,11 @@ class PagedKVCache:
     # -- lifetime ----------------------------------------------------------
 
     def pages_needed(self, total_tokens: int) -> int:
+        """Pages required to hold ``total_tokens`` KV entries (ceil)."""
         return -(-total_tokens // self.page_size)
 
     def can_admit(self, total_tokens: int) -> bool:
+        """True iff the pool can reserve a whole request lifetime now."""
         return self.allocator.can_alloc(self.pages_needed(total_tokens))
 
     def bind_slot(self, slot: int, total_tokens: int) -> list[int]:
@@ -132,6 +161,8 @@ class PagedKVCache:
         return pages
 
     def release_slot(self, slot: int) -> None:
+        """Free a retired slot's pages and clear its table row — the only
+        path by which pages return to the pool."""
         self.allocator.free(self._slot_pages.pop(slot))
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0

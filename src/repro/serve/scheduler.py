@@ -11,6 +11,19 @@ Arrival times are expressed in *decode steps* (virtual time): request i is
 eligible once the engine has executed ``arrival_step`` steps.  That keeps
 workloads deterministic across hosts of very different speeds while latency
 metrics (TTFT/ITL) are still measured in wall-clock seconds.
+
+Invariants:
+
+* Every in-flight request is bound to exactly one slot, and every slot id
+  is either in ``Scheduler.slots`` or on the free list — never both.
+  ``bind`` is only legal when ``has_capacity()``; ``retire`` is the only
+  way a slot returns to the free list.
+* Admission is FIFO past the queue head only (``pop_eligible``): a request
+  can never be overtaken, so no request starves behind the head-of-line
+  page wait.
+* The scheduler never touches KV pages itself — page ownership lives in
+  ``kv_cache.PagedKVCache``; the engine must bind/release cache pages in
+  lock-step with ``bind``/``retire`` (see ``engine.ContinuousEngine``).
 """
 
 from __future__ import annotations
@@ -24,6 +37,9 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt, token budget, and latency stamps
+    (``t_*`` fields are filled in by the serving engine)."""
+
     rid: int
     prompt: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int
@@ -36,14 +52,17 @@ class Request:
 
     @property
     def prompt_len(self) -> int:
+        """Number of prompt tokens."""
         return int(self.prompt.shape[0])
 
     @property
     def ttft_s(self) -> float:
+        """Time to first token: eligibility → first generated token."""
         return self.t_first_token - self.t_eligible
 
     @property
     def itl_s(self) -> float:
+        """Mean inter-token latency over the generated tokens."""
         n = len(self.out_tokens)
         if n <= 1:
             return 0.0
@@ -57,6 +76,7 @@ class RequestQueue:
         self._q: collections.deque[Request] = collections.deque()
 
     def push(self, req: Request) -> None:
+        """Append a request to the tail of the queue."""
         self._q.append(req)
 
     def __len__(self) -> int:
@@ -69,6 +89,7 @@ class RequestQueue:
         return iter(self._q)
 
     def head(self) -> Optional[Request]:
+        """The next request to be admitted (None when empty)."""
         return self._q[0] if self._q else None
 
     def pop_eligible(self, step: int) -> Optional[Request]:
@@ -79,6 +100,7 @@ class RequestQueue:
         return None
 
     def head_arrival(self) -> Optional[int]:
+        """Arrival step of the queue head (None when empty)."""
         return self._q[0].arrival_step if self._q else None
 
 
@@ -92,24 +114,32 @@ class Scheduler:
 
     @property
     def active_slots(self) -> set[int]:
+        """Slot ids currently bound to in-flight requests."""
         return set(self.slots)
 
     def has_capacity(self) -> bool:
+        """True iff at least one decode slot is free."""
         return bool(self._free_slots)
 
     def has_active(self) -> bool:
+        """True iff any request is still in flight."""
         return bool(self.slots)
 
     def bind(self, req: Request) -> int:
+        """Bind a request to a free slot; returns the slot id.  Only legal
+        when ``has_capacity()`` — the engine checks before admitting."""
         slot = self._free_slots.pop()
         self.slots[slot] = req
         return slot
 
     def finished_slots(self) -> list[int]:
+        """Slots whose request has produced its full token budget."""
         return [s for s, r in self.slots.items()
                 if len(r.out_tokens) >= r.max_new_tokens]
 
     def retire(self, slot: int) -> Request:
+        """Unbind a slot and return it to the free list; the caller must
+        release the slot's KV pages in the same scheduler iteration."""
         req = self.slots.pop(slot)
         self._free_slots.append(slot)
         return req

@@ -196,7 +196,12 @@ class TestKernelSynth:
         s = choose_matmul_blocks(4096, 4096, 4096)
         assert s.vmem_bytes <= TPU_VMEM_BUDGET
         assert s.block("b")[1] % MXU_DIM == 0
-        assert s.buffering in (2, 3)
+        # compute-bound GEMM: BlockSpec's implicit double buffering already
+        # hides the DMA, so the explicit burst pipeline must not be selected
+        assert not s.pipelined
+        # memory-bound skinny GEMM: deep burst staging predicted to win
+        skinny = choose_matmul_blocks(8, 4096, 8192, dtype_bytes=1)
+        assert skinny.pipelined and skinny.buffering > 2
 
     def test_flash_blocks_prefer_streaming_kv(self):
         from repro.core.kernel_synth import choose_flash_blocks

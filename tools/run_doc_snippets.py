@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Extract and smoke-execute the shell code blocks of README.md / docs/*.md.
+
+Docs drift when nobody runs them; this script keeps every documented command
+honest by executing the fenced ```bash blocks line by line on CI (the docs
+job).  Rules:
+
+* Only ``` ```bash ``` fences are executed; other languages are ignored.
+* Blank lines and pure-comment lines are skipped.
+* Lines matching a skip pattern are not run here because another CI job
+  already covers them (`pip install`, the tier-1 `pytest` gate) — they are
+  still printed so the skip is visible in the log.
+* A line ending with ``# docs-ci: skip`` is never executed (for commands
+  that need hardware or wall-clock the docs job can't afford).
+* Everything runs from the repo root with BENCH_SMOKE=1 so benchmark
+  invocations stay small.
+
+Usage: python tools/run_doc_snippets.py README.md docs/ARCHITECTURE.md
+Exits non-zero on the first failing command.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+_SKIP = (
+    re.compile(r"^pip\s+install"),            # the install step of each CI job
+    re.compile(r"python\s+-m\s+pytest"),      # the tier-1 gate (test job)
+    re.compile(r"python\s+-m\s+benchmarks\.run"),  # the test job's dedicated
+                                                   # smoke-benchmark steps
+)
+_SKIP_MARK = "# docs-ci: skip"
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def shell_blocks(text: str) -> list[str]:
+    """Return the lines of every ```bash fenced block, in order."""
+    lines, lang = [], None
+    for raw in text.splitlines():
+        m = _FENCE.match(raw.strip())
+        if m:
+            lang = m.group(1) if lang is None else None
+            continue
+        if lang == "bash":
+            lines.append(raw.rstrip())
+    return lines
+
+
+def run_file(path: pathlib.Path, root: pathlib.Path) -> int:
+    """Execute one document's bash lines; returns the number run."""
+    n_run = 0
+    for line in shell_blocks(path.read_text()):
+        cmd = line.strip()
+        if not cmd or cmd.startswith("#"):
+            continue
+        if cmd.endswith(_SKIP_MARK):
+            print(f"[skip-marked] {cmd}")
+            continue
+        if any(p.search(cmd) for p in _SKIP):
+            print(f"[covered-elsewhere] {cmd}")
+            continue
+        print(f"[run] {cmd}", flush=True)
+        res = subprocess.run(["bash", "-c", cmd], cwd=root)
+        if res.returncode != 0:
+            print(f"FAILED ({res.returncode}): {cmd}  [{path}]",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        n_run += 1
+    return n_run
+
+
+def main() -> None:
+    """Run every document named on the command line."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    docs = [pathlib.Path(a) for a in sys.argv[1:]] or [root / "README.md"]
+    total = 0
+    for doc in docs:
+        doc = doc if doc.is_absolute() else root / doc
+        if not doc.exists():
+            print(f"FAILED: no such doc {doc}", file=sys.stderr)
+            raise SystemExit(1)
+        total += run_file(doc, root)
+    print(f"doc snippets OK ({total} commands across {len(docs)} docs)")
+    if total == 0:
+        print("FAILED: no commands executed — are the fences ```bash?",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
