@@ -51,6 +51,7 @@ def _cases():
                      ("matvec", arr("Wq"),
                       ("load", arr("X"), (">>", ("<<", var("i"), const(1)),
                                           const(1)))))))
+    from repro.compile.trace import trace_term
     return [
         ("attn-AF+RF", attn_variant, "flash_attention"),
         ("int8-exact", lib["int8_matvec"].term, "int8_matvec"),
@@ -59,6 +60,11 @@ def _cases():
         ("int8-nonaffine", shifted, "int8_matvec"),
         ("ssd-loop-carried", lib["ssd_step"].term, "ssd_step"),
         ("rmsnorm-exact", lib["rmsnorm"].term, "rmsnorm"),
+        # point-cloud domain: expanded-distance (AF) and neg∘min∘neg (RF)
+        # software spellings must still land on the ISAXes
+        ("fps-expanded-dist", trace_term("fps"), "fps"),
+        ("ballq-expanded-dist", trace_term("ball_query"), "ball_query"),
+        ("groupagg-negmin", trace_term("group_aggregate"), "group_agg"),
     ]
 
 
@@ -88,13 +94,22 @@ def _dispatch_sweep() -> list[str]:
     eng2.run(make_poisson_workload(4, rate=2.0, vocab=cfg.vocab,
                                    prompt_lens=(8, 16), out_lens=(2, 4),
                                    seed=1))
+    # fold the point-cloud vertical into the same cache, so the reported
+    # match-rate spans both application domains (multi-application ISAX
+    # coverage — the retargetable-compiler claim under test)
+    B, N, M, K, C = 1, 256, 64, 8, 32
+    for op, shape in (("fps", (B, N, M)),
+                      ("ball_query", (B, N, M, K)),
+                      ("group_aggregate", (B, N, M, K, C))):
+        rec = lowering.lower(op, shape, "float32")
+        assert rec.impl == "isax", f"{op} did not extract: {rec.note}"
     dt = (time.perf_counter() - t0) * 1e6
     st = disp.stats()
     assert st["match_rate"] > 0, (
         "expected a nonzero ISAX match-rate on the default serve config")
     assert st["cache_hits"] > 0, "second engine should hit the compile cache"
     JSON_RECORDS.append({
-        "scenario": "dispatch_sweep/llama110m_continuous",
+        "scenario": "dispatch_sweep/llama110m_continuous+pointcloud",
         "backend": "pallas_interpret",
         **st,
     })

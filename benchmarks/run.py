@@ -12,9 +12,13 @@ list get their per-scenario records written to a JSON artifact so CI can
 archive the perf trajectory: ``llm_serve`` → ``BENCH_serve.json`` (schema:
 scenario, ttft_s, itl_s, tokens_per_s, …), ``compile_stats`` →
 ``BENCH_compile.json`` (Table-3 rows plus the dispatch sweep's ISAX
-match-rate / compile-cache hit-rate / burst-pipeline selections), and
+match-rate / compile-cache hit-rate / burst-pipeline selections),
 ``membw`` → ``BENCH_membw.json`` (pipelined vs unpipelined time per kernel
-with the cost model's predicted gain).
+with the cost model's predicted gain), and ``pointcloud`` →
+``BENCH_pointcloud.json`` (reference vs Pallas vs burst-pipelined for the
+point-cloud vertical).  Off-TPU the kernel sweeps run in interpret mode and
+carry ``timing_meaningful: false``; modules flag that with a ``SUMMARY``
+line printed after their rows.
 
 Env: BENCH_SMOKE=0 for full sizes.  ``--only <name>[,<name>…]`` restricts
 to a subset of modules (e.g. ``--only llm_serve,compile_stats`` in CI).
@@ -31,6 +35,7 @@ ARTIFACTS = {
     "llm_serve": "BENCH_serve.json",
     "compile_stats": "BENCH_compile.json",
     "membw": "BENCH_membw.json",
+    "pointcloud": "BENCH_pointcloud.json",
 }
 
 
@@ -43,13 +48,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_compile_stats, bench_kernels,
-                            bench_llm_serve, bench_membw, bench_roofline,
-                            bench_synthesis)
+                            bench_llm_serve, bench_membw, bench_pointcloud,
+                            bench_roofline, bench_synthesis)
     modules = [
         ("synthesis", bench_synthesis),
         ("kernels", bench_kernels),
         ("compile_stats", bench_compile_stats),
         ("membw", bench_membw),
+        ("pointcloud", bench_pointcloud),
         ("llm_serve", bench_llm_serve),
         ("roofline", bench_roofline),
     ]
@@ -69,6 +75,11 @@ def main() -> None:
             failed += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        # run verdict (e.g. membw's "interpret-mode parity check" note, so
+        # interpreter wall times are never mistaken for a measured win)
+        summary = getattr(mod, "SUMMARY", None)
+        if summary:
+            print(f"# {name}: {summary}", flush=True)
         artifact = ARTIFACTS.get(name)
         if artifact and getattr(mod, "JSON_RECORDS", None):
             path = f"{args.artifact_dir}/{artifact}"

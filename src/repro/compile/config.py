@@ -16,6 +16,7 @@ from typing import Optional
 from repro.compile.dispatch import CompileRecord, Dispatcher, get_dispatcher
 from repro.compile.trace import OpKey
 from repro.kernels import ref as kref
+from repro.pointcloud import ref as pcref
 
 VALID_BACKENDS = ("xla", "xla_chunked", "pallas", "pallas_interpret")
 
@@ -72,6 +73,38 @@ class LoweringConfig:
         if rec.impl == "isax":
             return rec.kernel_fn(x, wq, scale, interpret=self.interpret)
         return kref.int8_matmul_ref(x, wq, scale)
+
+    # -- point-cloud vertical (fps → ball_query → group_aggregate) ---------
+
+    def fps(self, xyz, n_samples: int):
+        """Farthest-point sampling through the dispatcher: xyz (B,N,d) →
+        sampled indices (B, n_samples) i32."""
+        B, N, _ = xyz.shape
+        rec = self.lower("fps", (B, N, n_samples), xyz.dtype)
+        if rec.impl == "isax":
+            return rec.kernel_fn(xyz, n_samples, interpret=self.interpret)
+        return pcref.fps_ref(xyz, n_samples)
+
+    def ball_query(self, xyz, centers, radius: float, k: int):
+        """Ball-query grouping through the dispatcher: xyz (B,N,d),
+        centers (B,M,d) → neighbor indices (B,M,k) i32."""
+        B, N, _ = xyz.shape
+        M = centers.shape[1]
+        rec = self.lower("ball_query", (B, N, M, k), xyz.dtype)
+        if rec.impl == "isax":
+            return rec.kernel_fn(xyz, centers, radius, k,
+                                 interpret=self.interpret)
+        return pcref.ball_query_ref(xyz, centers, radius, k)
+
+    def group_aggregate(self, features, idx):
+        """Grouped feature aggregation through the dispatcher: features
+        (B,N,C), idx (B,M,k) → max-pooled (B,M,C)."""
+        B, N, C = features.shape
+        M, k = idx.shape[1], idx.shape[2]
+        rec = self.lower("group_aggregate", (B, N, M, k, C), features.dtype)
+        if rec.impl == "isax":
+            return rec.kernel_fn(features, idx, interpret=self.interpret)
+        return pcref.group_aggregate_ref(features, idx)
 
 
 # ---------------------------------------------------------------------------

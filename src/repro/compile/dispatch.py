@@ -40,14 +40,20 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.compile.trace import TARGET_ISAX, OpKey, trace_kind, trace_term
+from repro.core.interface_model import TPU_VMEM_BUDGET
 from repro.core.kernel_synth import (
+    choose_ball_blocks,
     choose_flash_blocks,
+    choose_fps_blocks,
+    choose_group_blocks,
     choose_matmul_blocks,
     choose_ssd_blocks,
+    fps_vmem_bytes,
 )
 from repro.core.offload import compile_program, isax_library
 from repro.kernels import ops as kops
 from repro.kernels.ops import _down_pow2
+from repro.pointcloud import ops as pcops
 
 #: Minimum query rows for the flash ISAX: the row-blocked skeleton needs at
 #: least one sublane-worth of rows; single-token decode tiles degenerate.
@@ -59,6 +65,9 @@ _KERNELS: dict[str, Callable] = {
     "rmsnorm": kops.rmsnorm,
     "int8_matvec": kops.int8_matmul,
     "ssd_step": kops.ssd_scan,
+    "fps": pcops.farthest_point_sample,
+    "ball_query": pcops.ball_query,
+    "group_agg": pcops.group_aggregate,
 }
 
 
@@ -167,6 +176,52 @@ def _ssd_schedule(key: OpKey):
              **_pipeline_fields(sched)}, "ok")
 
 
+def _dtype_bytes(dtype: str) -> int:
+    # same itemsize convention as _attention_schedule, so the recorded
+    # schedule matches the one the pointcloud/ops wrapper re-derives
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        return 2 if dtype.endswith("16") else 4
+
+
+def _fps_schedule(key: OpKey):
+    B, N, S = key.shape
+    if S > N:
+        return None, f"more samples than points (S={S} > N={N})"
+    db = _dtype_bytes(key.dtype)
+    if fps_vmem_bytes(N, S, db) > TPU_VMEM_BUDGET:
+        # FPS has no tiling to shrink — an oversized cloud takes the
+        # reference, exactly as the pointcloud/ops wrapper does
+        return None, f"point set exceeds VMEM (N={N})"
+    sched = choose_fps_blocks(N, S, db)
+    return ({"n_points": N, "n_samples": S, "buffering": sched.buffering,
+             "vmem_bytes": sched.vmem_bytes,
+             **_pipeline_fields(sched)}, "ok")
+
+
+def _ball_schedule(key: OpKey):
+    B, N, M, K = key.shape
+    sched = choose_ball_blocks(M, N, K, _dtype_bytes(key.dtype))
+    tiles = pcops.pc_tiles(M, N, sched, "x")
+    if tiles is None:
+        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
+    return ({"block_m": tiles[0], "block_n": tiles[1],
+             "buffering": sched.buffering,
+             **_pipeline_fields(sched)}, "ok")
+
+
+def _group_schedule(key: OpKey):
+    B, N, M, K, C = key.shape
+    sched = choose_group_blocks(M, N, K, C, _dtype_bytes(key.dtype))
+    tiles = pcops.pc_tiles(M, N, sched, "f")
+    if tiles is None:
+        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
+    return ({"block_m": tiles[0], "block_n": tiles[1],
+             "buffering": sched.buffering,
+             **_pipeline_fields(sched)}, "ok")
+
+
 _SCHEDULERS = {
     "attention": _attention_schedule,
     "attention_decode": _attention_schedule,
@@ -174,6 +229,9 @@ _SCHEDULERS = {
     "rmsnorm": _rmsnorm_schedule,
     "int8_matmul": _int8_matmul_schedule,
     "ssd_scan": _ssd_schedule,
+    "fps": _fps_schedule,
+    "ball_query": _ball_schedule,
+    "group_aggregate": _group_schedule,
 }
 
 

@@ -33,6 +33,9 @@ TARGET_ISAX: dict[str, str | None] = {
     "matmul": None,
     "int8_matmul": "int8_matvec",
     "ssd_scan": "ssd_step",
+    "fps": "fps",
+    "ball_query": "ball_query",
+    "group_aggregate": "group_agg",
 }
 
 #: op name → trace-table entry (attention variants share one program: the
@@ -45,6 +48,9 @@ _TRACE_KIND = {
     "matmul": "matmul",
     "int8_matmul": "int8_matmul",
     "ssd_scan": "ssd_scan",
+    "fps": "fps",
+    "ball_query": "ball_query",
+    "group_aggregate": "group_aggregate",
 }
 
 
@@ -58,6 +64,9 @@ class OpKey:
       matmul:      (rows, d_in, d_out)
       int8_matmul: (rows, d_in, d_out)
       ssd_scan:    (b, s, H, P, N)
+      fps:             (B, n_points, n_samples)
+      ball_query:      (B, n_points, n_centers, k)
+      group_aggregate: (B, n_points, n_centers, k, channels)
     """
 
     op: str
@@ -134,12 +143,59 @@ def _ssd_program() -> Term:
                 ("store", arr("Y"), t, out))
 
 
+def _sqdist_expanded(a, b):
+    """Row-wise squared distance in the *expanded* spelling
+    ‖a‖² + (‖b‖² − 2·a·b): AF-divergent from the ISAXes' compact
+    rowsum((a−b)²) form — ``rewrites.sqdist-expand`` must bridge the gap."""
+    return ("+", ("rowsum", ("*", a, a)),
+            ("-", ("rowsum", ("*", b, b)),
+             ("*", ("const:2",), ("rowsum", ("*", a, b)))))
+
+
+def _fps_program():
+    """Farthest-point sampling with the distance spelled expanded; the
+    loop-carried dependences (S feeds the same iteration's distance update,
+    D feeds the next iteration's argmax) must survive saturation."""
+    s = var("s")
+    picked = ("load", arr("Xp"), ("load", arr("Sp"), s))
+    return for_("s", const(0), var("n_s"), const(1),
+                ("store", arr("Sp"), s,
+                 ("argmax", ("load", arr("Dp"), const(0)))),
+                ("store", arr("Dp"), const(0),
+                 ("min", ("load", arr("Dp"), const(0)),
+                  _sqdist_expanded(arr("Xp"), picked))))
+
+
+def _ball_query_program():
+    """Ball query with the expanded distance spelling (same AF divergence
+    as fps, exercised under a different skeleton)."""
+    j = var("j")
+    return for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Gq"), j,
+                 ("ballsel",
+                  _sqdist_expanded(arr("Xp"), ("load", arr("Cn"), j)),
+                  var("r2"), var("kk"))))
+
+
+def _group_agg_program():
+    """Grouped aggregation with max-pool spelled as neg∘colmin∘neg
+    (RF-divergent; ``rewrites.colmax-neg-colmin`` recovers the ISAX form)."""
+    j = var("j")
+    gathered = ("gather", arr("Fg"), ("load", arr("Gq"), j))
+    return for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Ag"), j,
+                 ("neg", ("colmin", ("neg", gathered)))))
+
+
 _PROGRAMS = {
     "attention": _attention_program,
     "rmsnorm": _rmsnorm_program,
     "matmul": _matmul_program,
     "int8_matmul": _int8_matmul_program,
     "ssd_scan": _ssd_program,
+    "fps": _fps_program,
+    "ball_query": _ball_query_program,
+    "group_aggregate": _group_agg_program,
 }
 
 

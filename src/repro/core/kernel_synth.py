@@ -353,3 +353,178 @@ def choose_ssd_blocks(
                     pipeline_gain=cost.gain)
     assert best is not None, "no feasible ssd tiling"
     return best
+
+
+# ---------------------------------------------------------------------------
+# Point-cloud ops (the irregular gather/scatter workloads of the second
+# application domain: FPS, ball query, grouped feature aggregation)
+# ---------------------------------------------------------------------------
+
+def fps_vmem_bytes(n_pts: int, n_samples: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of the FPS kernel: the whole point set plus the
+    running min-distance and the sample indices (FPS has no tiling — a
+    cloud that does not fit must take the reference path)."""
+    return n_pts * 3 * dtype_bytes + n_pts * 4 + n_samples * 4
+
+
+def choose_fps_blocks(
+    n_pts: int, n_samples: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Farthest-point sampling schedule: the whole point set stays VMEM-
+    resident across the sample loop.
+
+    FPS is latency-bound and loop-carried — sample ``s+1``'s argmax depends
+    on the distance sweep of sample ``s`` — so there is no cross-step
+    transfer to overlap and the burst pipeline is *structurally*
+    inapplicable (``buffering=1``, ``pipelined=False`` by construction,
+    not a cost-model outcome).
+
+    Callers must pre-check ``fps_vmem_bytes`` (the dispatcher and the op
+    wrapper both fall back to the reference when the cloud doesn't fit).
+    """
+    xyz_b = n_pts * 3 * dtype_bytes
+    vmem = fps_vmem_bytes(n_pts, n_samples, dtype_bytes)
+    assert vmem <= vmem_budget, f"point set too large for VMEM: {vmem}"
+    dma = _dma_cycles("fps_load", [("xyz", xyz_b, "load")])
+    # per sample: one (n_pts, 3) diff²-sum sweep + argmax, all on the VPU
+    compute = n_samples * (8.0 * n_pts) / _VPU_FLOPS_PER_CYCLE
+    total = dma + compute
+    return KernelSchedule(
+        name="fps",
+        block_shapes={"pts": (n_pts, 3)},
+        buffering=1,
+        est_step_cycles=compute / max(n_samples, 1),
+        est_total_cycles=total,
+        vmem_bytes=vmem,
+        decisions={"bound": "latency", "samples": str(n_samples),
+                   "pipeline": "off (loop-carried argmax)"},
+        pipelined=False,
+        est_serial_cycles=total,
+        pipeline_gain=1.0)
+
+
+def choose_ball_blocks(
+    n_centers: int, n_pts: int, k_nb: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Pick (bm centers, bn streamed points) + buffering for ball query.
+
+    Per step: one X coordinate tile streamed (cold), selection state (chosen
+    indices, running count/rank, nearest fallback) warm in scratch.  The
+    per-point selection math (distance + rank compares against ``k_nb``
+    slots) runs on the VPU, so small center tiles are memory-bound and big
+    ones compute-bound — the model decides.
+    """
+    itfc = tpu_interfaces()["hbm_vmem"]
+    best: KernelSchedule | None = None
+    for bm in _candidate_tiles(n_centers, 8, (8, 16, 32, 64, 128)):
+        for bn in _candidate_tiles(n_pts, MXU_DIM, (128, 256, 512, 1024)):
+            for buf in PIPELINE_DEPTHS:
+                x_b = bn * 3 * dtype_bytes
+                state_b = bm * (k_nb + 3) * 4
+                n_bufs = max(buf, BASELINE_OVERLAP)
+                # per-step intermediates: the (bm, bn) distance tile and the
+                # (bm, k, bn) hit tensor the rank selection materializes
+                vmem = n_bufs * x_b + bm * 3 * dtype_bytes + state_b \
+                    + bm * bn * (1 + k_nb) * 4
+                if vmem > vmem_budget:
+                    continue
+                steps = math.ceil(n_pts / bn)
+                m_sweeps = math.ceil(n_centers / bm)
+                dma = _dma_cycles("ball_step", [("x_tile", x_b, "load")])
+                flops = bm * bn * (8 + k_nb)  # dist² + rank/slot compares
+                compute = flops / _VPU_FLOPS_PER_CYCLE
+                cost = _pipeline_cost(compute, dma, buf, steps,
+                                      flops, x_b, itfc)
+                if buf > 1 and not cost.pipelined:
+                    continue
+                total = cost.total * m_sweeps
+                if best is None or total < best.est_total_cycles:
+                    best = KernelSchedule(
+                        name="ball_query",
+                        block_shapes={"centers": (bm, 3), "x": (bn, 3)},
+                        buffering=buf,
+                        est_step_cycles=cost.step,
+                        est_total_cycles=total,
+                        vmem_bytes=vmem,
+                        decisions={
+                            "bound": "compute"
+                                     if cost.step <= compute * (1 + 1e-9)
+                                     else "memory",
+                            "steps": str(steps * m_sweeps),
+                            "pipeline": _pipe_note(cost, buf),
+                        },
+                        pipelined=cost.pipelined,
+                        est_serial_cycles=cost.serial_total * m_sweeps,
+                        pipeline_gain=cost.gain)
+    assert best is not None, "no feasible ball-query tiling"
+    return best
+
+
+def choose_group_blocks(
+    n_centers: int, n_pts: int, k_nb: int, channels: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = TPU_VMEM_BUDGET,
+) -> KernelSchedule:
+    """Pick (bm centers, bn streamed feature rows) + buffering for grouped
+    feature aggregation (gather-as-one-hot-matmul + running max-pool).
+
+    The streamed feature tile is the cold operand — ``bn * channels`` bytes
+    against ``2·bm·k_nb·bn·channels`` MXU flops, so the op is memory-bound
+    exactly when ``bm·k_nb`` is small (each feature byte is reused
+    ``bm·k_nb`` times): the paper's poster-child shape for the burst DMA
+    engine.  Deep staging is auto-selected only on a predicted win (the
+    ``_pipeline_cost`` invariant), so compute-bound grouping shapes stay on
+    plain BlockSpec streaming.
+    """
+    itfc = tpu_interfaces()["hbm_vmem"]
+    best: KernelSchedule | None = None
+    for bm in _candidate_tiles(n_centers, 8, (8, 16, 32, 64, 128)):
+        for bn in _candidate_tiles(n_pts, MXU_DIM, (128, 256, 512, 1024)):
+            for buf in PIPELINE_DEPTHS:
+                f_b = bn * channels * dtype_bytes
+                idx_b = bm * k_nb * 4
+                acc_b = bm * channels * 4
+                n_bufs = max(buf, BASELINE_OVERLAP)
+                # per-step intermediates: the (bm·k, bn) one-hot matrix and
+                # the (bm, k, channels) gathered tensor — the dominant part
+                # of the real working set for large tiles
+                vmem = (n_bufs * f_b + idx_b + acc_b
+                        + bm * k_nb * bn * 4 + bm * k_nb * channels * 4)
+                if vmem > vmem_budget:
+                    continue
+                steps = math.ceil(n_pts / bn)
+                m_sweeps = math.ceil(n_centers / bm)
+                dma = _dma_cycles("group_step", [("f_tile", f_b, "load")])
+                flops = 2 * bm * k_nb * bn * channels
+                compute = (flops / _MXU_FLOPS_PER_CYCLE
+                           + bm * k_nb * bn / _VPU_FLOPS_PER_CYCLE)
+                cost = _pipeline_cost(compute, dma, buf, steps,
+                                      flops, f_b, itfc)
+                if buf > 1 and not cost.pipelined:
+                    continue
+                total = cost.total * m_sweeps
+                if best is None or total < best.est_total_cycles:
+                    best = KernelSchedule(
+                        name="group_aggregate",
+                        block_shapes={"centers": (bm, k_nb),
+                                      "f": (bn, channels)},
+                        buffering=buf,
+                        est_step_cycles=cost.step,
+                        est_total_cycles=total,
+                        vmem_bytes=vmem,
+                        decisions={
+                            "bound": "compute"
+                                     if cost.step <= compute * (1 + 1e-9)
+                                     else "memory",
+                            "steps": str(steps * m_sweeps),
+                            "pipeline": _pipe_note(cost, buf),
+                        },
+                        pipelined=cost.pipelined,
+                        est_serial_cycles=cost.serial_total * m_sweeps,
+                        pipeline_gain=cost.gain)
+    assert best is not None, "no feasible group-aggregate tiling"
+    return best

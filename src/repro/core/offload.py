@@ -66,9 +66,10 @@ def offload_cost(op: str, child_costs: list[float]) -> float:
         return float("inf")
     if op.startswith("isax:"):
         return 1.0 + sum(child_costs)
-    if op in ("matmul", "matvec", "outer"):
+    if op in ("matmul", "matvec", "outer", "gather", "ballsel"):
         return 200.0 + sum(child_costs)
-    if op in ("exp", "sqrt", "rsqrt", "recip", "rowmax", "rowsum", "sum"):
+    if op in ("exp", "sqrt", "rsqrt", "recip", "rowmax", "rowsum", "sum",
+              "argmax", "colmax", "colmin", "rowmean"):
         return 20.0 + sum(child_costs)
     if op.startswith("for:"):
         return 50.0 + sum(child_costs)
@@ -217,6 +218,23 @@ def _apply(o: str, a: list):
         return np.minimum(a[0], a[1])
     if o == "rowmax":
         return np.max(a[0], axis=-1)
+    if o == "argmax":
+        return int(np.argmax(a[0]))
+    if o == "colmax":
+        return np.max(a[0], axis=0)
+    if o == "colmin":
+        return np.min(a[0], axis=0)
+    if o == "gather":
+        return a[0][np.asarray(a[1], np.int64)]
+    if o == "ballsel":
+        # first-K in-radius indices (ascending), padded with the first hit;
+        # no point in radius → the nearest point (see pointcloud/ref.py)
+        d, r2, k = np.asarray(a[0]), float(a[1]), int(a[2])
+        hits = np.nonzero(d <= r2)[0][:k]
+        if hits.size == 0:
+            return np.full((k,), int(np.argmin(d)), np.int64)
+        return np.concatenate(
+            [hits, np.full((k - hits.size,), hits[0], np.int64)])
     if o == "rowsum":
         return np.sum(a[0], axis=-1)
     if o == "rowmean":
@@ -349,9 +367,76 @@ def isax_swiglu() -> ISAX:
     )
 
 
+def _sqdist(a: Term, b: Term) -> Term:
+    """Compact row-wise squared distance ‖a − b‖² (the ISAX-side spelling;
+    software variants spell it expanded — see ``rewrites.sqdist-expand``)."""
+    return ("rowsum", ("*", ("-", a, b), ("-", a, b)))
+
+
+def isax_fps() -> ISAX:
+    """Farthest-point sampling: S[s] = argmax of the running min-distance,
+    D ← min(D, ‖X − X[S[s]]‖²).  Loop-carried dependences through *both*
+    outputs (S feeds the distance update of the same iteration, D feeds the
+    argmax of the next) — the point-cloud stress test for the §5.4
+    loop-carried checks."""
+    s = var("s")
+    term = for_("s", const(0), var("n_s"), const(1),
+                ("store", arr("Sp"), s,
+                 ("argmax", ("load", arr("Dp"), const(0)))),
+                ("store", arr("Dp"), const(0),
+                 ("min", ("load", arr("Dp"), const(0)),
+                  _sqdist(arr("Xp"),
+                          ("load", arr("Xp"), ("load", arr("Sp"), s))))))
+    return ISAX(
+        name="fps",
+        params=("Xp", "n_s", "Dp", "Sp"),
+        term=term,
+        kernel="fps",
+        outputs=("Dp", "Sp"),
+    )
+
+
+def isax_ball_query() -> ISAX:
+    """Ball query / kNN grouping: G[j] = first-kk indices of X within
+    radius² of center j (padded; nearest point when the ball is empty).
+    The irregular-gather front half of PointNet++ set abstraction."""
+    j = var("j")
+    term = for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Gq"), j,
+                 ("ballsel",
+                  _sqdist(arr("Xp"), ("load", arr("Cn"), j)),
+                  var("r2"), var("kk"))))
+    return ISAX(
+        name="ball_query",
+        params=("Xp", "Cn", "r2", "kk", "n_c", "Gq"),
+        term=term,
+        kernel="ball_query",
+        outputs=("Gq",),
+    )
+
+
+def isax_group_agg() -> ISAX:
+    """Grouped feature aggregation: A[j] = max-pool over the rows of F
+    gathered by neighbor list G[j] (the fused PointNet++ set-abstraction
+    datapath: gather + reduce in one pass over the feature array)."""
+    j = var("j")
+    term = for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Ag"), j,
+                 ("colmax", ("gather", arr("Fg"),
+                             ("load", arr("Gq"), j)))))
+    return ISAX(
+        name="group_agg",
+        params=("Fg", "Gq", "n_c", "Ag"),
+        term=term,
+        kernel="group_aggregate",
+        outputs=("Ag",),
+    )
+
+
 def isax_library() -> list[ISAX]:
     return [isax_flash_attention(), isax_int8_matvec(), isax_ssd_step(),
-            isax_rmsnorm(), isax_swiglu()]
+            isax_rmsnorm(), isax_swiglu(), isax_fps(), isax_ball_query(),
+            isax_group_agg()]
 
 
 # ---------------------------------------------------------------------------
@@ -388,8 +473,38 @@ def _np_swiglu(Wg, Wu, Wo, Xs, n, Os):
     Os[:] = (g / (1.0 + np.exp(-g)) * u) @ Wo
 
 
+def _np_fps(Xp, n_s, Dp, Sp):
+    d = Dp[0]
+    for s in range(int(n_s)):
+        Sp[s] = int(np.argmax(d))
+        diff = Xp - Xp[Sp[s]]
+        d = np.minimum(d, (diff * diff).sum(-1))
+    Dp[0] = d
+
+
+def _np_ball_query(Xp, Cn, r2, kk, n_c, Gq):
+    k = int(kk)
+    for j in range(int(n_c)):
+        diff = Xp - Cn[j]
+        d = (diff * diff).sum(-1)
+        hits = np.nonzero(d <= float(r2))[0][:k]
+        if hits.size == 0:
+            Gq[j] = int(np.argmin(d))
+        else:
+            Gq[j, :hits.size] = hits
+            Gq[j, hits.size:] = hits[0]
+
+
+def _np_group_agg(Fg, Gq, n_c, Ag):
+    for j in range(int(n_c)):
+        Ag[j] = Fg[np.asarray(Gq[j], np.int64)].max(axis=0)
+
+
 register_intrinsic("flash_attention", _np_flash_attention)
 register_intrinsic("int8_matvec", _np_int8_matvec)
 register_intrinsic("ssd_step", _np_ssd_scan)
 register_intrinsic("rmsnorm", _np_rmsnorm)
 register_intrinsic("swiglu", _np_swiglu)
+register_intrinsic("fps", _np_fps)
+register_intrinsic("ball_query", _np_ball_query)
+register_intrinsic("group_agg", _np_group_agg)

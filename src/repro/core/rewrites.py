@@ -120,6 +120,19 @@ def internal_rules() -> list[Rewrite]:
           ("/", ("exp", ("-", s, ("rowmax", s))),
                 ("rowsum", ("exp", ("-", s, ("rowmax", s))))),
           ("/", ("exp", s), ("rowsum", ("exp", s))), bidirectional=True),
+        # squared-distance form: rowsum((a-b)²) == ‖a‖² + (‖b‖² − 2·a·b)
+        # (point-cloud software spells the expanded form, the fps/ball_query
+        # ISAXes the compact one — this rule is the bridge)
+        R("sqdist-expand",
+          ("rowsum", ("*", ("-", a, b), ("-", a, b))),
+          ("+", ("rowsum", ("*", a, a)),
+           ("-", ("rowsum", ("*", b, b)),
+            ("*", ("const:2",), ("rowsum", ("*", a, b))))),
+          bidirectional=True),
+        # max-pool as negated min-pool (representation form: the group_agg
+        # software variant spells colmax via neg∘colmin∘neg)
+        R("colmax-neg-colmin", ("colmax", x),
+          ("neg", ("colmin", ("neg", x))), bidirectional=True),
         # rsqrt form
         R("rsqrt-form", ("rsqrt", x), ("recip", ("sqrt", x)),
           bidirectional=True),

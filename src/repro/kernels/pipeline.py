@@ -10,6 +10,10 @@ and are streamed into a ``depth``-deep rotating VMEM buffer by an explicit
 DMA pipeline, overlapping the copy-in of tile ``i+1 .. i+depth-1`` with
 compute on tile ``i``.
 
+``BurstPipeline`` is the reusable streamer: the point-cloud kernels
+(``pointcloud/kernels.py``) drive their X/feature tile streaming through
+the same class, so the DMA schedule logic lives in exactly one place.
+
 Buffer depth and tile shapes come from ``core.kernel_synth`` (which models
 the transfer cost through the §4.1 interface-model recurrences and only
 turns the pipeline on when both the interface model and the roofline

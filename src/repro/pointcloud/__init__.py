@@ -1,0 +1,32 @@
+"""Point-cloud processing vertical (the paper's second application domain).
+
+Farthest-point sampling, ball-query neighbor grouping, and grouped feature
+aggregation (PointNet++-style set abstraction) ride the same co-design
+stack as the LLM ops: ``compile/trace.py`` captures each op as a
+``core/expr`` program, the e-graph pipeline matches the ``fps`` /
+``ball_query`` / ``group_agg`` ISAXes, ``core/kernel_synth`` schedules the
+memory-bound gather against the burst-DMA pipeline, and the Pallas kernels
+here execute the result (interpret-mode parity on CPU).
+"""
+
+from repro.pointcloud.ops import (
+    ball_query,
+    farthest_point_sample,
+    group_aggregate,
+    register_pointcloud_intrinsics,
+)
+from repro.pointcloud.ref import (
+    ball_query_ref,
+    fps_ref,
+    group_aggregate_ref,
+)
+
+__all__ = [
+    "ball_query",
+    "farthest_point_sample",
+    "group_aggregate",
+    "register_pointcloud_intrinsics",
+    "ball_query_ref",
+    "fps_ref",
+    "group_aggregate_ref",
+]

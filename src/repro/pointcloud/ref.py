@@ -1,0 +1,69 @@
+"""Pure-jnp point-cloud references: the correctness oracles for the Pallas
+kernels in ``pointcloud/kernels.py`` (index outputs must match *exactly*;
+feature outputs to fp tolerance).
+
+Semantics (shared with the kernels and the e-graph intrinsics):
+
+* ``fps_ref`` starts from index 0 (deterministic, the common convention)
+  and computes squared distances in fp32 regardless of input dtype.
+* ``ball_query_ref`` returns the first ``k`` in-radius indices per center
+  in ascending order, padded with the first hit; a center with an *empty*
+  ball gets its nearest point replicated (never an invalid index).
+* ``group_aggregate_ref`` max-pools the gathered feature rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fps_ref(xyz, n_samples: int):
+    """Farthest-point sampling: xyz (B, N, d) → indices (B, n_samples) i32."""
+    pts = xyz.astype(jnp.float32)
+    n = pts.shape[1]
+
+    def one(p):
+        def step(carry, _):
+            d, last = carry
+            diff = p - p[last]
+            d = jnp.minimum(d, jnp.sum(diff * diff, -1))
+            return (d, jnp.argmax(d).astype(jnp.int32)), last
+
+        init = (jnp.full((n,), 1e30, jnp.float32), jnp.int32(0))
+        _, sel = jax.lax.scan(step, init, None, length=n_samples)
+        return sel
+
+    return jax.vmap(one)(pts)
+
+
+def ball_query_ref(xyz, centers, radius: float, k: int,
+                   radius_sq: float | None = None):
+    """Ball query: xyz (B, N, d), centers (B, M, d) → indices (B, M, k) i32.
+
+    ``radius_sq`` supplies the squared radius exactly when the caller's
+    contract is in r² (the e-graph intrinsic) — re-squaring a rounded sqrt
+    would move the in-radius boundary by ULPs.
+    """
+    x = xyz.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    diff = c[:, :, None, :] - x[:, None, :, :]
+    d2 = jnp.sum(diff * diff, -1)                       # (B, M, N)
+    r2 = (jnp.float32(radius) * jnp.float32(radius)
+          if radius_sq is None else jnp.float32(radius_sq))
+    mask = d2 <= r2
+    rank = jnp.cumsum(mask.astype(jnp.int32), -1)       # (B, M, N)
+    count = rank[..., -1]                               # (B, M)
+    ks = jnp.arange(k, dtype=jnp.int32)
+    hit = mask[:, :, None, :] & (rank[:, :, None, :] == (ks + 1)[:, None])
+    sel = jnp.argmax(hit, -1).astype(jnp.int32)         # (B, M, k)
+    first = jnp.argmax(mask, -1).astype(jnp.int32)      # first in-radius hit
+    nearest = jnp.argmin(d2, -1).astype(jnp.int32)
+    pad = jnp.where(count > 0, first, nearest)
+    return jnp.where(count[..., None] > ks, sel, pad[..., None])
+
+
+def group_aggregate_ref(features, idx):
+    """Grouped max-pool: features (B, N, C), idx (B, M, k) → (B, M, C)."""
+    gathered = jax.vmap(lambda f, i: f[i])(features, idx)  # (B, M, k, C)
+    return jnp.max(gathered, axis=2)

@@ -1,0 +1,241 @@
+"""Point-cloud vertical: e-graph matching of the fps/ball_query/group_agg
+ISAXes from divergent software spellings, interpret-mode kernel parity
+(fp32/bf16, baseline + burst-pipelined), dispatch cache behavior, and the
+burst-pipeline loss veto on compute-bound grouping shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compile import Dispatcher, LoweringConfig, OpKey
+from repro.compile.trace import trace_term
+from repro.core.kernel_synth import (
+    PIPELINE_GAIN_MIN,
+    choose_ball_blocks,
+    choose_fps_blocks,
+    choose_group_blocks,
+)
+from repro.core.offload import compile_program, evaluate, isax_library
+from repro.pointcloud import kernels as pck
+from repro.pointcloud import ops as pcops
+from repro.pointcloud import ref as pcref
+
+RNG = np.random.default_rng(0)
+B, N, M, K, C = 2, 256, 64, 8, 32
+RADIUS = 0.9
+
+
+def _cloud(dtype=jnp.float32):
+    xyz = jnp.asarray(RNG.normal(size=(B, N, 3)), dtype)
+    feats = jnp.asarray(RNG.normal(size=(B, N, C)), dtype)
+    return xyz, feats
+
+
+# ---------------------------------------------------------------------------
+# (a) e-graph compilation: divergent spellings land on the ISAXes, and the
+#     offloaded programs evaluate identically to the originals
+# ---------------------------------------------------------------------------
+
+class TestEGraphMatching:
+    @pytest.mark.parametrize("kind,want", [
+        ("fps", "fps"),
+        ("ball_query", "ball_query"),
+        ("group_aggregate", "group_agg"),
+    ])
+    def test_divergent_spelling_matches(self, kind, want):
+        res = compile_program(trace_term(kind), isax_library(), case=kind)
+        assert want in res.stats.matched_isaxes
+        # fps/ball_query require the sqdist bridge, group_agg the
+        # neg∘min∘neg bridge — matching must be a saturation theorem,
+        # not string equality
+        assert res.stats.internal_rewrites > 0
+
+    def test_matmul_negative_control_still_clean(self):
+        res = compile_program(trace_term("matmul"), isax_library(),
+                              case="matmul")
+        assert res.stats.matched_isaxes == []
+
+    def test_offloaded_fps_evaluates_identically(self):
+        n, n_s = 48, 6
+        X = RNG.normal(size=(n, 3))
+        env = dict(Xp=X, n_s=n_s, Dp=np.full((1, n), 1e30),
+                   Sp=np.zeros(n_s, np.int64))
+        env2 = {k: (v.copy() if isinstance(v, np.ndarray) else v)
+                for k, v in env.items()}
+        res = compile_program(trace_term("fps"), isax_library(), case="fps")
+        evaluate(trace_term("fps"), env)
+        evaluate(res.program, env2)
+        np.testing.assert_array_equal(env["Sp"], env2["Sp"])
+        np.testing.assert_allclose(env["Dp"], env2["Dp"], atol=1e-9)
+
+    def test_offloaded_ball_and_group_evaluate_identically(self):
+        n, m, k, c = 64, 8, 4, 6
+        X = RNG.normal(size=(n, 3))
+        Cn = X[:m]
+        F = RNG.normal(size=(n, c))
+        env = dict(Xp=X, Cn=Cn, r2=1.0, kk=k, n_c=m,
+                   Gq=np.zeros((m, k), np.int64))
+        env2 = {key: (v.copy() if isinstance(v, np.ndarray) else v)
+                for key, v in env.items()}
+        res = compile_program(trace_term("ball_query"), isax_library(),
+                              case="ballq")
+        evaluate(trace_term("ball_query"), env)
+        evaluate(res.program, env2)
+        np.testing.assert_array_equal(env["Gq"], env2["Gq"])
+
+        genv = dict(Fg=F, Gq=env["Gq"], n_c=m, Ag=np.zeros((m, c)))
+        genv2 = {key: (v.copy() if isinstance(v, np.ndarray) else v)
+                 for key, v in genv.items()}
+        res = compile_program(trace_term("group_aggregate"), isax_library(),
+                              case="groupagg")
+        evaluate(trace_term("group_aggregate"), genv)
+        evaluate(res.program, genv2)
+        np.testing.assert_allclose(genv["Ag"], genv2["Ag"], atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# (b) interpret-mode kernel parity vs the jnp references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+class TestKernelParity:
+    def test_fps_exact(self, dtype):
+        xyz, _ = _cloud(dtype)
+        got = pck.fps(xyz, M, interpret=True)
+        want = pcref.fps_ref(xyz, M)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ball_query_exact(self, dtype):
+        xyz, _ = _cloud(dtype)
+        centers = xyz[:, :M]
+        want = pcref.ball_query_ref(xyz, centers, RADIUS, K)
+        got = pck.ball_query(xyz, centers, RADIUS, K, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        gotp = pck.ball_query_pipelined(xyz, centers, RADIUS, K, depth=3,
+                                        interpret=True)
+        np.testing.assert_array_equal(np.asarray(gotp), np.asarray(want))
+
+    def test_group_aggregate_exact(self, dtype):
+        xyz, feats = _cloud(dtype)
+        idx = pcref.ball_query_ref(xyz, xyz[:, :M], RADIUS, K)
+        want = np.asarray(pcref.group_aggregate_ref(feats, idx), np.float32)
+        got = pck.group_aggregate(feats, idx, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got, np.float32), want)
+        gotp = pck.group_aggregate_pipelined(feats, idx, depth=3,
+                                             interpret=True)
+        np.testing.assert_array_equal(np.asarray(gotp, np.float32), want)
+
+
+def test_wrapper_ref_fallback_on_untileable_shapes():
+    # 65 centers / 200 points: the largest power-of-two divisors (1 and 8)
+    # degrade below the meaningful tile minimum, so pc_tiles reports the
+    # shape untileable and the wrappers take the reference path
+    xyz = jnp.asarray(RNG.normal(size=(1, 200, 3)), jnp.float32)
+    centers = xyz[:, :65]
+    assert pcops.pc_tiles(65, 200, pcops._ball_schedule(65, 200, K, 4),
+                          "x") is None
+    got = pcops.ball_query(xyz, centers, RADIUS, K, interpret=True)
+    want = pcref.ball_query_ref(xyz, centers, RADIUS, K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    feats = jnp.asarray(RNG.normal(size=(1, 200, C)), jnp.float32)
+    gota = pcops.group_aggregate(feats, got, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(gota),
+        np.asarray(pcref.group_aggregate_ref(feats, got)), atol=1e-6)
+    assert np.asarray(pcops.farthest_point_sample(
+        xyz, 300, interpret=True)).shape == (1, 300)  # S > N → ref
+
+
+def test_dispatch_falls_back_on_untileable_and_oversized_shapes():
+    lw = LoweringConfig("pallas_interpret", Dispatcher())
+    rec = lw.lower("ball_query", (1, 200, 65, K), "float32")
+    assert rec.impl == "reference" and "untileable" in rec.note
+    assert rec.target_matched  # matched, not extracted
+    rec = lw.lower("group_aggregate", (1, 200, 65, K, C), "float32")
+    assert rec.impl == "reference" and "untileable" in rec.note
+    # FPS has no tiling: a cloud too large for VMEM lowers to the reference
+    rec = lw.lower("fps", (1, 8_000_000, 64), "float32")
+    assert rec.impl == "reference" and "VMEM" in rec.note
+
+
+# ---------------------------------------------------------------------------
+# (c) dispatch: ISAX extraction, cache-key round trip
+# ---------------------------------------------------------------------------
+
+class TestDispatch:
+    def test_all_three_ops_extract_isax(self):
+        disp = Dispatcher()
+        lw = LoweringConfig("pallas_interpret", disp)
+        for op, shape in (("fps", (B, N, M)),
+                          ("ball_query", (B, N, M, K)),
+                          ("group_aggregate", (B, N, M, K, C))):
+            rec = lw.lower(op, shape, "float32")
+            assert rec.impl == "isax", f"{op}: {rec.note}"
+            assert rec.target_matched
+            assert rec.kernel_fn is not None
+            assert "pipelined" in rec.schedule
+
+    def test_cache_key_round_trip(self):
+        disp = Dispatcher()
+        lw = LoweringConfig("pallas_interpret", disp)
+        key = ("ball_query", (B, N, M, K), "float32")
+        r1 = lw.lower(*key)
+        assert disp.misses == 1 and disp.hits == 0
+        r2 = lw.lower(*key)
+        assert r2 is r1 and disp.hits == 1
+        # dtype and backend are part of the key
+        r3 = lw.lower("ball_query", (B, N, M, K), "bfloat16")
+        assert r3 is not r1
+        r4 = LoweringConfig("xla", disp).lower(*key)
+        assert r4 is not r1 and r4.impl == "reference"
+        assert disp.records[OpKey("ball_query", (B, N, M, K), "float32",
+                                  "pallas_interpret")] is r1
+
+    def test_lowering_config_set_abstraction_parity(self):
+        xyz, feats = _cloud()
+        lw = LoweringConfig("pallas_interpret", Dispatcher())
+        sel = lw.fps(xyz, M)
+        centers = jnp.take_along_axis(xyz, sel[..., None], axis=1)
+        idx = lw.ball_query(xyz, centers, RADIUS, K)
+        agg = lw.group_aggregate(feats, idx)
+        np.testing.assert_array_equal(np.asarray(sel),
+                                      np.asarray(pcref.fps_ref(xyz, M)))
+        np.testing.assert_array_equal(
+            np.asarray(idx),
+            np.asarray(pcref.ball_query_ref(xyz, centers, RADIUS, K)))
+        np.testing.assert_allclose(
+            np.asarray(agg),
+            np.asarray(pcref.group_aggregate_ref(feats, idx)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (d) synthesis: burst-pipeline decisions, loss veto
+# ---------------------------------------------------------------------------
+
+class TestPipelineDecisions:
+    def test_fps_never_pipelined(self):
+        sched = choose_fps_blocks(2048, 128)
+        assert sched.buffering == 1 and not sched.pipelined
+
+    def test_memory_bound_grouping_selects_pipeline(self):
+        sched = choose_group_blocks(64, 4096, 8, 64)
+        assert sched.pipelined and sched.buffering > 1
+        assert sched.pipeline_gain >= PIPELINE_GAIN_MIN
+
+    def test_compute_bound_grouping_vetoes_pipeline(self):
+        # bm·k·2/dtype_bytes ≫ MXU-to-HBM flops/byte ridge: the one-hot
+        # gather matmul dominates and deeper staging cannot pay off
+        sched = choose_group_blocks(512, 512, 64, 256)
+        assert not sched.pipelined and sched.buffering == 1
+        assert sched.est_total_cycles <= sched.est_serial_cycles * (1 + 1e-9)
+
+    @pytest.mark.parametrize("sched_fn", [
+        lambda: choose_ball_blocks(256, 4096, 16),
+        lambda: choose_group_blocks(64, 4096, 8, 64),
+        lambda: choose_group_blocks(512, 512, 64, 256),
+        lambda: choose_fps_blocks(1024, 64),
+    ])
+    def test_never_selected_on_predicted_loss(self, sched_fn):
+        sched = sched_fn()
+        assert sched.pipelined == (sched.pipeline_gain >= PIPELINE_GAIN_MIN
+                                   and sched.buffering > 1)
