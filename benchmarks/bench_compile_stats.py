@@ -16,7 +16,8 @@ import time
 import numpy as np
 
 from repro.core.expr import arr, const, for_, var
-from repro.core.offload import compile_program, isax_library
+from repro.core.offload import compile_program
+from repro.targets import isax_library
 
 # Per-run records for the BENCH_compile.json artifact; populated by run().
 JSON_RECORDS: list[dict] = []
@@ -78,7 +79,8 @@ def _dispatch_sweep() -> list[str]:
     from repro.serve.scheduler import make_poisson_workload
 
     disp = Dispatcher()  # fresh cache: rates reflect this sweep only
-    lowering = LoweringConfig(backend="pallas_interpret", dispatcher=disp)
+    lowering = LoweringConfig.from_registry("pallas_interpret",
+                                            dispatcher=disp)
     cfg = reduced(get_config("llama110m"))
     t0 = time.perf_counter()
     eng = ContinuousEngine(cfg, max_batch=2, page_size=16, max_len=64,

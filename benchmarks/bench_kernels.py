@@ -16,7 +16,8 @@ import time
 import numpy as np
 
 from repro.core.expr import arr, const, for_, var
-from repro.core.offload import compile_program, evaluate, isax_library
+from repro.core.offload import compile_program, evaluate
+from repro.targets import isax_library
 from repro.kernels.ops import register_kernel_intrinsics
 
 register_kernel_intrinsics()

@@ -93,7 +93,7 @@ def run() -> list[str]:
                else "point-cloud ops measured on TPU")
     backend = "pallas_interpret" if _INTERPRET else "pallas"
     disp = Dispatcher()  # fresh cache: records reflect this sweep only
-    lw = LoweringConfig(backend, disp)
+    lw = LoweringConfig.from_registry(backend, dispatcher=disp)
 
     for B, N, M, K, C in _SHAPES:
         xyz = jnp.asarray(_RNG.normal(size=(B, N, 3)), jnp.float32)

@@ -61,9 +61,12 @@ def main() -> None:
     ]
     if args.only:
         wanted = set(args.only.split(","))
-        unknown = wanted - {n for n, _ in modules}
+        valid = [n for n, _ in modules]
+        unknown = wanted - set(valid)
         if unknown:
-            raise SystemExit(f"unknown bench module(s): {sorted(unknown)}")
+            raise SystemExit(
+                f"unknown bench module(s): {sorted(unknown)}; "
+                f"valid: {valid}")
         modules = [(n, m) for n, m in modules if n in wanted]
     print("name,us_per_call,derived")
     failed = 0

@@ -9,7 +9,8 @@ overflow-safe-average representation change — printing Table-3-style stats.
 import numpy as np
 
 from repro.core.expr import arr, const, for_, var
-from repro.core.offload import compile_program, evaluate, isax_int8_matvec
+from repro.core.offload import compile_program, evaluate
+from repro.targets.llm import isax_int8_matvec
 from repro.kernels.ops import register_kernel_intrinsics
 
 register_kernel_intrinsics()

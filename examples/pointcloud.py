@@ -19,7 +19,8 @@ import numpy as np
 from repro.compile import Dispatcher, LoweringConfig
 from repro.compile.trace import trace_term
 from repro.core.kernel_synth import choose_ball_blocks, choose_group_blocks
-from repro.core.offload import compile_program, evaluate, isax_library
+from repro.core.offload import compile_program, evaluate
+from repro.targets import isax_library
 from repro.pointcloud import ref
 from repro.pointcloud.ops import register_pointcloud_intrinsics
 
@@ -71,7 +72,7 @@ def system_side():
     feats = jnp.asarray(rng.normal(size=(B, N, C)), jnp.float32)
 
     disp = Dispatcher()
-    lw = LoweringConfig("pallas_interpret", disp)
+    lw = LoweringConfig.from_registry("pallas_interpret", dispatcher=disp)
     sel = lw.fps(xyz, M)
     centers = jnp.take_along_axis(xyz, sel[..., None], axis=1)
     idx = lw.ball_query(xyz, centers, 1.2, K)

@@ -39,7 +39,7 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    lowering = LoweringConfig(backend=args.backend)
+    lowering = LoweringConfig.from_registry(backend=args.backend)
     params = None
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         tree, mf = ckpt.load(args.ckpt_dir)

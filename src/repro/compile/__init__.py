@@ -1,11 +1,19 @@
 """Compiler-driven kernel dispatch (trace → saturate → match → extract →
-kernel).
+kernel) over the declarative ``repro.targets`` registry.
 
-The models' hot ops are captured into the ``core/expr`` mini-IR
-(``trace``), lowered through equality saturation + skeleton/component ISAX
-matching with a persistent in-process compile cache (``dispatch``), and
-executed through the backend policy object threaded into models and serve
-engines (``config.LoweringConfig``).
+The models' hot ops are captured into the ``core/expr`` mini-IR (trace
+programs live on the registered ``IsaxSpec`` entries), lowered through
+equality saturation + skeleton/component ISAX matching by the generic
+registry engine with a persistent in-process compile cache (``dispatch``),
+and executed through the backend policy object threaded into models and
+serve engines (``config.LoweringConfig``).
+
+Public entry points of the retargetable lowering API:
+
+* ``lower(op, *, shape, dtype, backend=None)`` — one-shot compile-cache
+  lookup through the global registry.
+* ``LoweringConfig.from_registry(backend, registry=...)`` — a threadable
+  policy, optionally bound to an isolated :class:`TargetRegistry`.
 """
 
 from repro.compile.config import (
@@ -13,6 +21,7 @@ from repro.compile.config import (
     LoweringConfig,
     default_lowering,
     get_default_backend,
+    lower,
     set_default_backend,
     set_default_lowering,
 )
@@ -29,6 +38,7 @@ __all__ = [
     "LoweringConfig",
     "default_lowering",
     "get_default_backend",
+    "lower",
     "set_default_backend",
     "set_default_lowering",
     "CompileRecord",

@@ -17,6 +17,7 @@ from repro.compile.dispatch import CompileRecord, Dispatcher, get_dispatcher
 from repro.compile.trace import OpKey
 from repro.kernels import ref as kref
 from repro.pointcloud import ref as pcref
+from repro.targets.registry import TargetRegistry
 
 VALID_BACKENDS = ("xla", "xla_chunked", "pallas", "pallas_interpret")
 
@@ -53,6 +54,33 @@ class LoweringConfig:
         self.backend = backend
         self.interpret = backend == "pallas_interpret"
         self.dispatcher = dispatcher or get_dispatcher()
+
+    @classmethod
+    def from_registry(cls, backend: Optional[str] = None, *,
+                      registry: Optional[TargetRegistry] = None,
+                      dispatcher: Optional[Dispatcher] = None
+                      ) -> "LoweringConfig":
+        """Build a lowering policy over an ISAX/domain registry.
+
+        The canonical constructor for engines, launchers, examples, and
+        benchmarks: with no arguments it binds the global ``repro.targets``
+        registry through the process-wide compile cache; pass ``registry=``
+        to dispatch against an isolated :class:`TargetRegistry` (e.g. one
+        carrying an experimental domain) with its own fresh cache, or
+        ``dispatcher=`` to share a specific cache instance.
+        """
+        if dispatcher is None:
+            dispatcher = (Dispatcher(registry) if registry is not None
+                          else get_dispatcher())
+        elif registry is not None and dispatcher.registry is not registry:
+            raise ValueError("pass either registry= or dispatcher=, not "
+                             "disagreeing both")
+        return cls(backend=backend, dispatcher=dispatcher)
+
+    @property
+    def registry(self) -> TargetRegistry:
+        """The ISAX/domain registry this policy dispatches against."""
+        return self.dispatcher.registry
 
     def __repr__(self):
         return f"LoweringConfig(backend={self.backend!r})"
@@ -116,11 +144,32 @@ _DEFAULT: Optional[LoweringConfig] = None
 
 
 def default_lowering() -> LoweringConfig:
-    """The process-default LoweringConfig (created lazily from the env)."""
+    """The process-default LoweringConfig (created lazily from the env,
+    bound to the global ``repro.targets`` registry)."""
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = LoweringConfig()
+        _DEFAULT = LoweringConfig.from_registry()
     return _DEFAULT
+
+
+def lower(op: str, *, shape, dtype, backend: Optional[str] = None
+          ) -> CompileRecord:
+    """Public one-shot lowering: compile-cache lookup for one op instance
+    through the registry-backed dispatch pipeline.
+
+    The top-level entry point of the retargetable lowering API:
+    ``repro.compile.lower("attention", shape=(1, 128, 4, 2, 128, 64),
+    dtype="float32", backend="pallas")``.  With ``backend=None`` the
+    process-default policy (env override included) applies; an explicit
+    ``backend`` reuses the default policy's dispatcher (and therefore its
+    registry and compile cache), so repeated calls are O(dict lookup) and
+    a custom default installed via ``set_default_lowering`` keeps working.
+    """
+    dflt = default_lowering()
+    if backend is None:
+        return dflt.lower(op, shape, dtype)
+    return LoweringConfig(backend=backend,
+                          dispatcher=dflt.dispatcher).lower(op, shape, dtype)
 
 
 def set_default_lowering(lowering: LoweringConfig) -> Optional[LoweringConfig]:
@@ -136,7 +185,7 @@ def set_default_backend(backend: str) -> str:
     backend name.  Note jit caches traces — changing the default does not
     retrace already-compiled functions (same as the old global flag)."""
     prior = default_lowering().backend
-    set_default_lowering(LoweringConfig(backend=backend))
+    set_default_lowering(LoweringConfig.from_registry(backend))
     return prior
 
 

@@ -1,19 +1,23 @@
-"""Compiler-driven kernel dispatch: the lowering pass behind every hot op.
+"""Generic compile-cache engine over the declarative ISAX/domain registry.
 
 For each ``OpKey`` (op, shape, dtype, backend) the dispatcher runs the full
 retargetable-compiler flow over the traced software program — equality
 saturation (``core/rewrites``) interleaved with ISAX-guided external loop
 transforms, then skeleton/component matching (``core/matching``) — and
-decides whether to extract an ``isax:*`` kernel call (a Pallas entry point
-from ``kernels/ops.py``, with a schedule from ``core/kernel_synth``) or fall
-back to the XLA reference.  Decisions live in a persistent in-process
-compile cache, so the e-graph work is paid once per op kind and the
-schedule/tileability decision once per shape; later jit traces of the same
-op hit the cache.
+decides whether to extract an ``isax:*`` kernel call (the spec's bound
+Pallas entry point, with a schedule from the spec's ``kernel_synth``
+scheduler) or fall back to the XLA reference.  Decisions live in a
+persistent in-process compile cache, so the e-graph work is paid once per
+trace spec and the schedule/tileability decision once per shape; later jit
+traces of the same op hit the cache.
 
-Kernel entry points are resolved here, at dispatch/compile time (module
-import), never lazily inside a forward function: a ``CompileRecord`` carries
-the bound callable.
+The engine is *registry-generic*: it imports no domain module, names no
+op, and holds no scheduler/kernel tables.  Everything op-specific — trace
+program, target ISAX, scheduler, kernel entry point, chunked-XLA policy —
+comes from the ``repro.targets`` registry (``IsaxSpec``), so a new domain
+plugs in by registration alone.  Kernel entry points are resolved at spec
+registration, never lazily inside a forward function: a ``CompileRecord``
+carries the bound callable.
 
 Invariants:
 
@@ -23,9 +27,11 @@ Invariants:
   any input property that should change the lowering (a new shape, a dtype
   switch, a different backend preference) must be part of the key.
 * **E-graph amortization** — saturation/matching outcomes are memoized per
-  *trace kind* (attention prefill/decode/paged share one run); schedules
-  and impl decisions are per key.  ``lower`` is called at jit-trace time
-  only, so steady-state inference never pays a dispatch cost.
+  *registry spec identity* (attention prefill/decode/paged share one spec
+  and therefore one run; two domains can never alias a trace kind by
+  picking the same kind string).  Schedules and impl decisions are per
+  key.  ``lower`` is called at jit-trace time only, so steady-state
+  inference never pays a dispatch cost.
 * **Recorded schedules are the executed schedules** — the schedule dict in
   a ``CompileRecord`` (tiles, buffer depth, burst-pipeline go/no-go) uses
   the same ``core.kernel_synth`` entry points the kernel wrappers consult,
@@ -35,45 +41,18 @@ Invariants:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
-import numpy as np
-
-from repro.compile.trace import TARGET_ISAX, OpKey, trace_kind, trace_term
-from repro.core.interface_model import TPU_VMEM_BUDGET
-from repro.core.kernel_synth import (
-    choose_ball_blocks,
-    choose_flash_blocks,
-    choose_fps_blocks,
-    choose_group_blocks,
-    choose_matmul_blocks,
-    choose_ssd_blocks,
-    fps_vmem_bytes,
-)
-from repro.core.offload import compile_program, isax_library
-from repro.kernels import ops as kops
-from repro.kernels.ops import _down_pow2
-from repro.pointcloud import ops as pcops
-
-#: Minimum query rows for the flash ISAX: the row-blocked skeleton needs at
-#: least one sublane-worth of rows; single-token decode tiles degenerate.
-_MIN_QUERY_TILE = 8
-
-#: ISAX name → resolved kernel entry point (once, at import).
-_KERNELS: dict[str, Callable] = {
-    "flash_attention": kops.flash_attention_gqa,
-    "rmsnorm": kops.rmsnorm,
-    "int8_matvec": kops.int8_matmul,
-    "ssd_step": kops.ssd_scan,
-    "fps": pcops.farthest_point_sample,
-    "ball_query": pcops.ball_query,
-    "group_agg": pcops.group_aggregate,
-}
+from repro.compile.trace import OpKey
+from repro.core.offload import compile_program
+from repro.targets import default_registry
+from repro.targets.registry import IsaxSpec, TargetRegistry
 
 
 @dataclasses.dataclass(frozen=True)
 class MatchOutcome:
-    """E-graph compilation result for one trace kind (shape-independent)."""
+    """E-graph compilation result for one trace spec (shape-independent)."""
 
     matched: tuple[str, ...]
     internal_rewrites: int
@@ -116,153 +95,43 @@ class CompileRecord:
         }
 
 
-def _pipeline_fields(sched) -> dict:
-    """Burst-DMA pipeline decision recorded in the compile-cache entry (and
-    therefore in ``BENCH_compile.json`` via ``CompileRecord.row``): whether
-    the kernel streams its cold operands through ``kernels/pipeline.py``
-    and the conservatively-predicted gain (the depth is the schedule's
-    ``buffering`` field, recorded alongside)."""
-    return {"pipelined": sched.pipelined,
-            "pipeline_gain": round(sched.pipeline_gain, 3),
-            "est_serial_cycles": sched.est_serial_cycles}
-
-
-def _attention_schedule(key: OpKey):
-    B, S, H, K, T, hd = key.shape
-    if S < _MIN_QUERY_TILE:
-        return None, f"degenerate query tile (S={S} < {_MIN_QUERY_TILE})"
-    # itemsize (not a name heuristic) so the recorded schedule matches the
-    # one the kernel wrapper re-derives from q.dtype.itemsize; ml_dtypes
-    # (pulled in via the kernels import) registers bfloat16 with numpy
-    try:
-        dtype_bytes = np.dtype(key.dtype).itemsize
-    except TypeError:
-        dtype_bytes = 2 if key.dtype.endswith("16") else 4
-    sched = choose_flash_blocks(S, T, hd, dtype_bytes)
-    bq = _down_pow2(S, sched.block("q")[0])
-    bk = _down_pow2(T, sched.block("kv")[0])
-    if S % bq or T % bk or H % K:
-        return None, f"untileable shape S={S} T={T} H={H} K={K}"
-    return ({"block_q": bq, "block_k": bk, "buffering": sched.buffering,
-             "est_step_cycles": sched.est_step_cycles,
-             "vmem_bytes": sched.vmem_bytes,
-             **_pipeline_fields(sched)}, "ok")
-
-
-def _rmsnorm_schedule(key: OpKey):
-    rows, d = key.shape
-    return {"block_rows": _down_pow2(rows, 256)}, "ok"
-
-
-def _int8_matmul_schedule(key: OpKey):
-    M, Kd, N = key.shape
-    sched = choose_matmul_blocks(M, N, Kd, dtype_bytes=1)
-    bm = _down_pow2(M, sched.block("a")[0])
-    bn = _down_pow2(N, sched.block("b")[1])
-    bk = _down_pow2(Kd, sched.block("a")[1])
-    if M % bm or N % bn or Kd % bk:
-        return None, f"untileable shape M={M} N={N} K={Kd}"
-    return ({"block_m": bm, "block_n": bn, "block_k": bk,
-             "buffering": sched.buffering, **_pipeline_fields(sched)}, "ok")
-
-
-def _ssd_schedule(key: OpKey):
-    b, s, H, P, N = key.shape
-    sched = choose_ssd_blocks(s, H, P, N)
-    chunk = _down_pow2(s, sched.block("chunk")[0])
-    if s % chunk:
-        return None, f"untileable sequence s={s}"
-    return ({"chunk": chunk, "buffering": sched.buffering,
-             **_pipeline_fields(sched)}, "ok")
-
-
-def _dtype_bytes(dtype: str) -> int:
-    # same itemsize convention as _attention_schedule, so the recorded
-    # schedule matches the one the pointcloud/ops wrapper re-derives
-    try:
-        return np.dtype(dtype).itemsize
-    except TypeError:
-        return 2 if dtype.endswith("16") else 4
-
-
-def _fps_schedule(key: OpKey):
-    B, N, S = key.shape
-    if S > N:
-        return None, f"more samples than points (S={S} > N={N})"
-    db = _dtype_bytes(key.dtype)
-    if fps_vmem_bytes(N, S, db) > TPU_VMEM_BUDGET:
-        # FPS has no tiling to shrink — an oversized cloud takes the
-        # reference, exactly as the pointcloud/ops wrapper does
-        return None, f"point set exceeds VMEM (N={N})"
-    sched = choose_fps_blocks(N, S, db)
-    return ({"n_points": N, "n_samples": S, "buffering": sched.buffering,
-             "vmem_bytes": sched.vmem_bytes,
-             **_pipeline_fields(sched)}, "ok")
-
-
-def _ball_schedule(key: OpKey):
-    B, N, M, K = key.shape
-    sched = choose_ball_blocks(M, N, K, _dtype_bytes(key.dtype))
-    tiles = pcops.pc_tiles(M, N, sched, "x")
-    if tiles is None:
-        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
-    return ({"block_m": tiles[0], "block_n": tiles[1],
-             "buffering": sched.buffering,
-             **_pipeline_fields(sched)}, "ok")
-
-
-def _group_schedule(key: OpKey):
-    B, N, M, K, C = key.shape
-    sched = choose_group_blocks(M, N, K, C, _dtype_bytes(key.dtype))
-    tiles = pcops.pc_tiles(M, N, sched, "f")
-    if tiles is None:
-        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
-    return ({"block_m": tiles[0], "block_n": tiles[1],
-             "buffering": sched.buffering,
-             **_pipeline_fields(sched)}, "ok")
-
-
-_SCHEDULERS = {
-    "attention": _attention_schedule,
-    "attention_decode": _attention_schedule,
-    "attention_paged": _attention_schedule,
-    "rmsnorm": _rmsnorm_schedule,
-    "int8_matmul": _int8_matmul_schedule,
-    "ssd_scan": _ssd_schedule,
-    "fps": _fps_schedule,
-    "ball_query": _ball_schedule,
-    "group_aggregate": _group_schedule,
-}
-
-
 class Dispatcher:
     """Persistent in-process compile cache over the e-graph ISAX pipeline.
 
     ``lower`` is the only entry point the models call (at jit-trace time, so
-    steady-state inference never pays a dispatch cost).  E-graph outcomes are
-    memoized per trace kind — attention prefill/decode/paged share one
-    saturation run — while schedules and impl decisions are per shape.
+    steady-state inference never pays a dispatch cost).  E-graph outcomes
+    are memoized per registry spec — attention prefill/decode/paged share
+    one spec's saturation run — while schedules and impl decisions are per
+    shape.  Pass ``registry=`` to bind a custom :class:`TargetRegistry`
+    (e.g. an isolated registry carrying an experimental domain); the
+    default is the global ``repro.targets`` registry.
     """
 
-    def __init__(self):
+    def __init__(self, registry: Optional[TargetRegistry] = None):
+        self.registry = registry if registry is not None else default_registry()
         self.records: dict[OpKey, CompileRecord] = {}
-        self._outcomes: dict[str, MatchOutcome] = {}
+        #: spec identity → MatchOutcome; keyed on the IsaxSpec *object*
+        #: (``eq=False``), never its kind string — two domains reusing a
+        #: kind label get independent saturation runs by construction.
+        self._outcomes: dict[IsaxSpec, MatchOutcome] = {}
         self.hits = 0
         self.misses = 0
 
-    # -- e-graph compilation (per trace kind) ------------------------------
+    # -- e-graph compilation (per trace spec) ------------------------------
 
-    def match_outcome(self, kind: str) -> MatchOutcome:
-        """E-graph saturation + matching for one trace kind (memoized)."""
-        out = self._outcomes.get(kind)
+    def match_outcome(self, spec: IsaxSpec) -> MatchOutcome:
+        """E-graph saturation + matching for one trace spec (memoized on
+        the spec's identity)."""
+        out = self._outcomes.get(spec)
         if out is None:
-            res = compile_program(trace_term(kind), isax_library(),
-                                  case=f"dispatch/{kind}")
+            res = compile_program(
+                spec.trace_program(), self.registry.isaxes(),
+                case=f"dispatch/{spec.domain}/{spec.trace_kind}")
             s = res.stats
             out = MatchOutcome(tuple(dict.fromkeys(s.matched_isaxes)),
                                s.internal_rewrites, s.external_rewrites,
                                s.initial_enodes, s.saturated_enodes)
-            self._outcomes[kind] = out
+            self._outcomes[spec] = out
         return out
 
     # -- lowering decision (per key) ---------------------------------------
@@ -281,8 +150,9 @@ class Dispatcher:
         return rec
 
     def _decide(self, key: OpKey) -> CompileRecord:
-        outcome = self.match_outcome(trace_kind(key.op))
-        target = TARGET_ISAX[key.op]
+        spec = self.registry.op_spec(key.op)  # ValueError on unknown op
+        outcome = self.match_outcome(spec)
+        target = spec.target
         matched = target is not None and target in outcome.matched
 
         def _rec(impl, kernel_fn=None, schedule=None, note=""):
@@ -295,18 +165,16 @@ class Dispatcher:
             if not matched:
                 return _rec("reference",
                             note="no ISAX matched; XLA reference")
-            schedule, why = _SCHEDULERS[key.op](key)
+            schedule, why = spec.scheduler(key)
             if schedule is None:
                 return _rec("reference",
                             note=f"{target} matched but {why}; XLA reference")
-            return _rec("isax", kernel_fn=_KERNELS[target],
+            return _rec("isax", kernel_fn=spec.kernel,
                         schedule=schedule, note=f"extracted isax:{target}")
-        if key.backend == "xla_chunked" and key.op.startswith("attention"):
-            B, S = key.shape[0], key.shape[1]
-            if S > 1:
-                return _rec("chunked",
-                            note="online-softmax chunked XLA lowering")
-            return _rec("reference", note="single-row query; XLA reference")
+        if key.backend == "xla_chunked" and spec.chunked is not None:
+            if key.shape[spec.chunked.axis] > 1:
+                return _rec("chunked", note=spec.chunked.note)
+            return _rec("reference", note=spec.chunked.fallback_note)
         return _rec("reference", note=f"backend {key.backend}: XLA reference"
                     + ("" if not matched else f" ({target} matched)"))
 
@@ -336,9 +204,40 @@ class Dispatcher:
         }
 
 
-_DISPATCHER = Dispatcher()
+_DISPATCHER: Optional[Dispatcher] = None
 
 
 def get_dispatcher() -> Dispatcher:
-    """The process-wide compile cache (persistent across engines/models)."""
+    """The process-wide compile cache (persistent across engines/models),
+    bound to the global ``repro.targets`` registry."""
+    global _DISPATCHER
+    if _DISPATCHER is None:
+        _DISPATCHER = Dispatcher()
     return _DISPATCHER
+
+
+def __getattr__(name: str):
+    """Deprecation shims for the pre-registry module internals.
+
+    ``_SCHEDULERS`` and ``_KERNELS`` were hand-maintained dicts scripts
+    sometimes reached into; both are now derived views over the registry
+    and will be removed after one release.
+    """
+    if name == "_SCHEDULERS":
+        warnings.warn(
+            "repro.compile.dispatch._SCHEDULERS is deprecated; schedulers "
+            "live on repro.targets IsaxSpec entries "
+            "(default_registry().op_spec(op).scheduler)",
+            DeprecationWarning, stacklevel=2)
+        reg = default_registry()
+        return {op: reg.op_spec(op).scheduler for op in reg.ops()
+                if reg.op_spec(op).scheduler is not None}
+    if name == "_KERNELS":
+        warnings.warn(
+            "repro.compile.dispatch._KERNELS is deprecated; kernel entry "
+            "points live on repro.targets IsaxSpec entries "
+            "(default_registry().spec(name).kernel)",
+            DeprecationWarning, stacklevel=2)
+        return {s.name: s.kernel for s in default_registry().specs()
+                if s.kernel is not None}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

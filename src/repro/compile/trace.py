@@ -1,64 +1,62 @@
-"""Layer-op tracer: capture each hot op as a ``core/expr`` mini-IR program.
+"""Compile-cache keys and registry-backed trace lookups.
 
 This is the front half of the dispatch pipeline (trace → saturate → match →
-extract → kernel).  Every hot op the models execute — GQA attention, paged
-decode attention, RMSNorm, int8/bf16 matmul, the SSD scan — has a
-software-side loop-nest description here.  The spellings are deliberately
-*divergent* from the ISAX library's semantics (scale placed inside the
-matvec, softmax without the max shift, rsqrt via recip∘sqrt): matching is a
-theorem proved by equality saturation plus skeleton/component matching, not
-string equality, which is exactly the paper's retargetability claim.
+extract → kernel).  The *trace programs themselves* — the deliberately
+divergent software-side loop nests for every hot op — live on the
+``repro.targets`` domain packages now (``IsaxSpec.trace_program``); this
+module keeps the cache key (:class:`OpKey`) and thin registry-backed
+views so historical imports (``TARGET_ISAX``, ``trace_kind``,
+``trace_term``) keep working and can never drift from the registry.
 
 ``OpKey`` is the compile-cache key: one entry per (op, shape, dtype,
-backend).  Shape tuples are per-op conventions (documented on ``op_key``)
+backend).  Shape tuples are per-op conventions (documented on ``OpKey``)
 chosen so that every distinct kernel-schedule decision gets its own entry
-while batch-irrelevant details are folded away.
+while batch-irrelevant details are folded away.  Op names are validated
+against the dispatcher's registry at lowering time (not here), so keys for
+custom-registry domains construct cleanly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
+from collections.abc import Mapping
 
-from repro.core.expr import Term, arr, const, for_, var
+from repro.core.expr import Term
+from repro.targets import default_registry
+
+
+class _TargetIsaxView(Mapping):
+    """Live ``op → target-ISAX-or-None`` mapping over the global registry.
+
+    Replaces the old hand-maintained module dict: iteration order is
+    registration order, membership tracks whatever domains are registered,
+    and a ``None`` value still marks a deliberate negative control."""
+
+    def __getitem__(self, op: str):
+        return default_registry().target_isax(op)
+
+    def __iter__(self):
+        return iter(default_registry().ops())
+
+    def __len__(self):
+        return len(default_registry().ops())
+
+    def __repr__(self):
+        return f"TARGET_ISAX({dict(self)!r})"
+
 
 #: op name → the ISAX the compiler is expected to be able to target (None
 #: means "no specialized datapath exists" — a deliberate negative control
-#: whose keys must lower to the XLA reference).
-TARGET_ISAX: dict[str, str | None] = {
-    "attention": "flash_attention",
-    "attention_decode": "flash_attention",
-    "attention_paged": "flash_attention",
-    "rmsnorm": "rmsnorm",
-    "matmul": None,
-    "int8_matmul": "int8_matvec",
-    "ssd_scan": "ssd_step",
-    "fps": "fps",
-    "ball_query": "ball_query",
-    "group_aggregate": "group_agg",
-}
-
-#: op name → trace-table entry (attention variants share one program: the
-#: e-graph outcome is shape-independent; only the schedule decision differs).
-_TRACE_KIND = {
-    "attention": "attention",
-    "attention_decode": "attention",
-    "attention_paged": "attention",
-    "rmsnorm": "rmsnorm",
-    "matmul": "matmul",
-    "int8_matmul": "int8_matmul",
-    "ssd_scan": "ssd_scan",
-    "fps": "fps",
-    "ball_query": "ball_query",
-    "group_aggregate": "group_aggregate",
-}
+#: whose keys must lower to the XLA reference).  Derived live from the
+#: ``repro.targets`` registry.
+TARGET_ISAX: Mapping = _TargetIsaxView()
 
 
 @dataclasses.dataclass(frozen=True)
 class OpKey:
     """Compile-cache key: one persistent entry per (op, shape, dtype, backend).
 
-    Shape conventions:
+    Shape conventions (built-in domains):
       attention / attention_decode / attention_paged: (B, S, H, K, T, hd)
       rmsnorm:     (rows, d)
       matmul:      (rows, d_in, d_out)
@@ -67,6 +65,8 @@ class OpKey:
       fps:             (B, n_points, n_samples)
       ball_query:      (B, n_points, n_centers, k)
       group_aggregate: (B, n_points, n_centers, k, channels)
+
+    New domains document their conventions on their ``IsaxSpec`` entries.
     """
 
     op: str
@@ -75,132 +75,22 @@ class OpKey:
     backend: str
 
     def __post_init__(self):
-        if self.op not in TARGET_ISAX:
-            raise ValueError(f"unknown dispatch op {self.op!r}; "
-                             f"known: {sorted(TARGET_ISAX)}")
+        if not self.op or not isinstance(self.op, str):
+            raise ValueError(f"OpKey.op must be a non-empty string, "
+                             f"got {self.op!r}")
 
 
 def trace_kind(op: str) -> str:
     """Trace kind an op's e-graph outcome is memoized under (attention
-    prefill/decode/paged all share the ``attention`` saturation run)."""
-    return _TRACE_KIND[op]
+    prefill/decode/paged all share the ``attention`` saturation run).
+
+    Registry-backed: the *engine* memoizes on the spec object itself (two
+    domains can never alias a kind string); this helper only reports the
+    human-readable label."""
+    return default_registry().op_spec(op).trace_kind
 
 
-def _attention_program() -> Term:
-    """Row-blocked attention, AF+RF-divergent: the scale rides inside the
-    matvec and the softmax omits the max shift (the bench's robustness
-    variant) — internal rewrites must recover the flash ISAX form."""
-    i = var("i")
-    q = ("load", arr("Q"), i)
-    s = ("/",
-         ("exp", ("matvec", arr("K"), ("*", var("scale"), q))),
-         ("rowsum", ("exp", ("matvec", arr("K"), ("*", var("scale"), q)))))
-    return for_("i", const(0), var("n_q"), const(1),
-                ("store", arr("P"), i, s),
-                ("store", arr("O"), i,
-                 ("matvec", ("transpose", arr("V")), ("load", arr("P"), i))))
-
-
-def _rmsnorm_program() -> Term:
-    """RMSNorm with rsqrt spelled as recip∘sqrt (RF-divergent)."""
-    i = var("i")
-    x = ("load", arr("Xn"), i)
-    return for_("i", const(0), var("n"), const(1),
-                ("store", arr("On"), i,
-                 ("*", ("*", x, ("recip", ("sqrt",
-                                           ("+", ("rowmean", ("*", x, x)),
-                                            var("eps"))))),
-                  arr("G"))))
-
-
-def _matmul_program() -> Term:
-    """Plain row-wise matmul — no quantization scale, so it must NOT match
-    the int8_matvec ISAX (the library has no bf16 GEMM datapath)."""
-    i = var("i")
-    return for_("i", const(0), var("n"), const(1),
-                ("store", arr("C"), i,
-                 ("matvec", arr("W"), ("load", arr("X"), i))))
-
-
-def _int8_matmul_program() -> Term:
-    i = var("i")
-    return for_("i", const(0), var("n"), const(1),
-                ("store", arr("C"), i,
-                 ("*", var("s_w"),
-                  ("matvec", arr("Wq"), ("load", arr("X"), i)))))
-
-
-def _ssd_program() -> Term:
-    """SSD recurrence with the loop-carried state dependence through H."""
-    t = var("t")
-    upd = ("+",
-           ("*", ("load", arr("A"), t), ("load", arr("H"), const(0))),
-           ("outer", ("load", arr("B"), t), ("load", arr("X"), t)))
-    out = ("matvec", ("transpose", ("load", arr("H"), const(0))),
-           ("load", arr("C"), t))
-    return for_("t", const(0), var("T"), const(1),
-                ("store", arr("H"), const(0), upd),
-                ("store", arr("Y"), t, out))
-
-
-def _sqdist_expanded(a, b):
-    """Row-wise squared distance in the *expanded* spelling
-    ‖a‖² + (‖b‖² − 2·a·b): AF-divergent from the ISAXes' compact
-    rowsum((a−b)²) form — ``rewrites.sqdist-expand`` must bridge the gap."""
-    return ("+", ("rowsum", ("*", a, a)),
-            ("-", ("rowsum", ("*", b, b)),
-             ("*", ("const:2",), ("rowsum", ("*", a, b)))))
-
-
-def _fps_program():
-    """Farthest-point sampling with the distance spelled expanded; the
-    loop-carried dependences (S feeds the same iteration's distance update,
-    D feeds the next iteration's argmax) must survive saturation."""
-    s = var("s")
-    picked = ("load", arr("Xp"), ("load", arr("Sp"), s))
-    return for_("s", const(0), var("n_s"), const(1),
-                ("store", arr("Sp"), s,
-                 ("argmax", ("load", arr("Dp"), const(0)))),
-                ("store", arr("Dp"), const(0),
-                 ("min", ("load", arr("Dp"), const(0)),
-                  _sqdist_expanded(arr("Xp"), picked))))
-
-
-def _ball_query_program():
-    """Ball query with the expanded distance spelling (same AF divergence
-    as fps, exercised under a different skeleton)."""
-    j = var("j")
-    return for_("j", const(0), var("n_c"), const(1),
-                ("store", arr("Gq"), j,
-                 ("ballsel",
-                  _sqdist_expanded(arr("Xp"), ("load", arr("Cn"), j)),
-                  var("r2"), var("kk"))))
-
-
-def _group_agg_program():
-    """Grouped aggregation with max-pool spelled as neg∘colmin∘neg
-    (RF-divergent; ``rewrites.colmax-neg-colmin`` recovers the ISAX form)."""
-    j = var("j")
-    gathered = ("gather", arr("Fg"), ("load", arr("Gq"), j))
-    return for_("j", const(0), var("n_c"), const(1),
-                ("store", arr("Ag"), j,
-                 ("neg", ("colmin", ("neg", gathered)))))
-
-
-_PROGRAMS = {
-    "attention": _attention_program,
-    "rmsnorm": _rmsnorm_program,
-    "matmul": _matmul_program,
-    "int8_matmul": _int8_matmul_program,
-    "ssd_scan": _ssd_program,
-    "fps": _fps_program,
-    "ball_query": _ball_query_program,
-    "group_aggregate": _group_agg_program,
-}
-
-
-@functools.lru_cache(maxsize=None)
 def trace_term(kind: str) -> Term:
-    """The software-side program for one trace kind (memoized: terms are
-    shape-independent, so each kind is built once per process)."""
-    return _PROGRAMS[kind]()
+    """The software-side program for one trace kind, resolved through the
+    registry (terms are shape-independent)."""
+    return default_registry().spec_for_kind(kind).trace_program()

@@ -31,3 +31,9 @@ def get_config(name: str) -> ModelConfig:
 
 def all_configs() -> dict[str, ModelConfig]:
     return {k: get_config(k) for k in _MODULES}
+
+
+def available_configs() -> list[str]:
+    """Registered architecture names (public home of the old ``_MODULES``
+    keys, which tests used to import privately)."""
+    return list(_MODULES)

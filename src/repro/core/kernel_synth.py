@@ -84,6 +84,20 @@ class KernelSchedule:
         return self.block_shapes[key]
 
 
+def pipeline_fields(sched: "KernelSchedule") -> dict:
+    """Burst-DMA pipeline decision as compile-cache schedule fields.
+
+    Every domain scheduler folds these into the schedule dict it records
+    (and therefore into ``BENCH_compile.json`` via ``CompileRecord.row``):
+    whether the kernel streams its cold operands through
+    ``kernels/pipeline.py`` and the conservatively-predicted gain (the
+    depth is the schedule's ``buffering`` field, recorded alongside).
+    """
+    return {"pipelined": sched.pipelined,
+            "pipeline_gain": round(sched.pipeline_gain, 3),
+            "est_serial_cycles": sched.est_serial_cycles}
+
+
 @dataclasses.dataclass(frozen=True)
 class _PipeCost:
     """Cost of one (tiling, depth) candidate under the pipeline model."""

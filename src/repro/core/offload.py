@@ -13,24 +13,28 @@
 
 ``evaluate`` executes programs (numpy semantics) so tests can assert that the
 offloaded program is bit-compatible (allclose) with the original — with ISAX
-intrinsics bound to fused kernel implementations from ``kernels/``.
+intrinsics derived from the ``repro.targets`` registry (every registered
+``IsaxSpec.evaluator``), optionally overridden by fused kernel
+implementations from ``kernels/`` via ``register_intrinsic``.
+
+The ISAX *definitions* themselves live on the domain packages
+(``repro/targets/llm.py``, ``repro/targets/pointcloud.py``);
+``isax_library()`` survives here only as a deprecation shim.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
-
-import numpy as np
+import warnings
+from typing import Callable
 
 from repro.core import expr
 from repro.core.egraph import EGraph
-from repro.core.expr import Term, arr, const, for_, var
+from repro.core.expr import Term
 from repro.core.matching import ISAX, decompose, match_isax
 from repro.core.rewrites import (
     external_rewrite_pass,
     saturate_internal,
-    structure_distance,
 )
 
 
@@ -123,13 +127,28 @@ _INTRINSICS: dict[str, IntrinsicFn] = {}
 
 
 def register_intrinsic(name: str, fn: IntrinsicFn) -> None:
+    """Override the intrinsic bound to ``isax:<name>`` e-nodes (used by
+    ``kernels/ops.py`` / ``pointcloud/ops.py`` to swap the registry's numpy
+    semantics for the fused/Pallas-backed datapaths)."""
     _INTRINSICS[name] = fn
+
+
+def _registry_intrinsics() -> dict[str, IntrinsicFn]:
+    """Evaluator semantics derived from the ``repro.targets`` registry
+    (imported lazily: targets depends on core, not the other way around)."""
+    from repro import targets
+    return targets.evaluators()
 
 
 def evaluate(t: Term, env: dict, intrinsics: dict[str, IntrinsicFn] | None = None):
     """Execute a program term.  ``env`` maps array/var names to numpy arrays /
-    scalars; stores mutate arrays in place.  Returns the last value."""
-    table = dict(_INTRINSICS)
+    scalars; stores mutate arrays in place.  Returns the last value.
+
+    Intrinsic resolution order: registry evaluator semantics (every
+    registered ``IsaxSpec.evaluator``), then ``register_intrinsic``
+    overrides, then the per-call ``intrinsics`` table."""
+    table = _registry_intrinsics()
+    table.update(_INTRINSICS)
     if intrinsics:
         table.update(intrinsics)
     return _eval(t, env, table)
@@ -257,254 +276,41 @@ def _apply(o: str, a: list):
 
 
 # ---------------------------------------------------------------------------
-# ISAX library: the specialized datapaths this "ASIP" ships (§6 analogues)
+# ISAX library — MOVED: definitions now live on the ``repro.targets`` domain
+# packages (``targets/llm.py``, ``targets/pointcloud.py``); this module
+# keeps deprecation/compat shims only.
 # ---------------------------------------------------------------------------
-
-def isax_flash_attention() -> ISAX:
-    """Row-blocked attention: for each query row i, S[i] = softmax-numerator,
-    O[i] = normalized PV product.  Two components under two store anchors in
-    a single-loop skeleton (the paper's Figure 5 shape, adapted)."""
-    i = var("i")
-    q_row = ("load", arr("Q"), i)
-    s_row = ("/",
-             ("exp", ("-", ("*", var("scale"), ("matvec", arr("K"), q_row)),
-                      ("rowmax", ("*", var("scale"),
-                                  ("matvec", arr("K"), q_row))))),
-             ("rowsum", ("exp", ("-", ("*", var("scale"),
-                                       ("matvec", arr("K"), q_row)),
-                                 ("rowmax", ("*", var("scale"),
-                                             ("matvec", arr("K"), q_row)))))))
-    body_s = ("store", arr("P"), i, s_row)
-    body_o = ("store", arr("O"), i,
-              ("matvec", ("transpose", arr("V")), ("load", arr("P"), i)))
-    term = for_("i", const(0), var("n_q"), const(1), body_s, body_o)
-    return ISAX(
-        name="flash_attention",
-        params=("Q", "K", "V", "scale", "n_q", "P", "O"),
-        term=term,
-        kernel="flash_attention",
-        outputs=("P", "O"),
-    )
-
-
-def isax_int8_matvec() -> ISAX:
-    """Quantized GEMV: C[i] = s_w * (Wq @ x[i]) — the LLM-inference ISAX
-    (paper §6.5 uses 8-bit quantized Llama attention/FFN)."""
-    i = var("i")
-    term = for_("i", const(0), var("n"), const(1),
-                ("store", arr("C"), i,
-                 ("*", var("s_w"),
-                  ("matvec", arr("Wq"), ("load", arr("X"), i)))))
-    return ISAX(
-        name="int8_matvec",
-        params=("Wq", "X", "s_w", "n", "C"),
-        term=term,
-        kernel="int8_matmul",
-        outputs=("C",),
-    )
-
-
-def isax_ssd_step() -> ISAX:
-    """SSD (state-space duality) recurrence: H ← a_t·H + B_t⊗x_t;
-    y_t = H^T·C_t.  Loop-carried dependence through H (tests the §5.4
-    loop-carried check)."""
-    t = var("t")
-    upd = ("+",
-           ("*", ("load", arr("A"), t), ("load", arr("H"), const(0))),
-           ("outer", ("load", arr("B"), t), ("load", arr("X"), t)))
-    out = ("matvec", ("transpose", ("load", arr("H"), const(0))),
-           ("load", arr("C"), t))
-    term = for_("t", const(0), var("T"), const(1),
-                ("store", arr("H"), const(0), upd),
-                ("store", arr("Y"), t, out))
-    return ISAX(
-        name="ssd_step",
-        params=("A", "B", "C", "X", "T", "H", "Y"),
-        term=term,
-        kernel="ssd_scan",
-        outputs=("H", "Y"),
-    )
-
-
-def isax_rmsnorm() -> ISAX:
-    """Fused RMSNorm row op: O[i] = x * rsqrt(mean(x²) + eps) * g."""
-    i = var("i")
-    x = ("load", arr("Xn"), i)
-    term = for_("i", const(0), var("n"), const(1),
-                ("store", arr("On"), i,
-                 ("*", ("*", x, ("rsqrt",
-                                 ("+", ("rowmean", ("*", x, x)),
-                                  var("eps")))),
-                  arr("G"))))
-    return ISAX(
-        name="rmsnorm",
-        params=("Xn", "G", "eps", "n", "On"),
-        term=term,
-        kernel="rmsnorm",
-        outputs=("On",),
-    )
-
-
-def isax_swiglu() -> ISAX:
-    """Fused SwiGLU MLP row op: O[i] = ((Wg·x)·σ(Wg·x) ⊙ (Wu·x))ᵀ·Wo —
-    written with silu expanded to its x·sigmoid(x) = x/(1+exp(−x)) form so
-    software variants using either spelling match."""
-    i = var("i")
-    x = ("load", arr("Xs"), i)
-    g = ("matvec", arr("Wg"), x)
-    u = ("matvec", arr("Wu"), x)
-    silu_g = ("/", g, ("+", ("const:1",), ("exp", ("neg", g))))
-    term = for_("i", const(0), var("n"), const(1),
-                ("store", arr("Os"), i,
-                 ("matvec", ("transpose", arr("Wo")),
-                  ("*", silu_g, u))))
-    return ISAX(
-        name="swiglu",
-        params=("Wg", "Wu", "Wo", "Xs", "n", "Os"),
-        term=term,
-        kernel="swiglu",
-        outputs=("Os",),
-    )
-
-
-def _sqdist(a: Term, b: Term) -> Term:
-    """Compact row-wise squared distance ‖a − b‖² (the ISAX-side spelling;
-    software variants spell it expanded — see ``rewrites.sqdist-expand``)."""
-    return ("rowsum", ("*", ("-", a, b), ("-", a, b)))
-
-
-def isax_fps() -> ISAX:
-    """Farthest-point sampling: S[s] = argmax of the running min-distance,
-    D ← min(D, ‖X − X[S[s]]‖²).  Loop-carried dependences through *both*
-    outputs (S feeds the distance update of the same iteration, D feeds the
-    argmax of the next) — the point-cloud stress test for the §5.4
-    loop-carried checks."""
-    s = var("s")
-    term = for_("s", const(0), var("n_s"), const(1),
-                ("store", arr("Sp"), s,
-                 ("argmax", ("load", arr("Dp"), const(0)))),
-                ("store", arr("Dp"), const(0),
-                 ("min", ("load", arr("Dp"), const(0)),
-                  _sqdist(arr("Xp"),
-                          ("load", arr("Xp"), ("load", arr("Sp"), s))))))
-    return ISAX(
-        name="fps",
-        params=("Xp", "n_s", "Dp", "Sp"),
-        term=term,
-        kernel="fps",
-        outputs=("Dp", "Sp"),
-    )
-
-
-def isax_ball_query() -> ISAX:
-    """Ball query / kNN grouping: G[j] = first-kk indices of X within
-    radius² of center j (padded; nearest point when the ball is empty).
-    The irregular-gather front half of PointNet++ set abstraction."""
-    j = var("j")
-    term = for_("j", const(0), var("n_c"), const(1),
-                ("store", arr("Gq"), j,
-                 ("ballsel",
-                  _sqdist(arr("Xp"), ("load", arr("Cn"), j)),
-                  var("r2"), var("kk"))))
-    return ISAX(
-        name="ball_query",
-        params=("Xp", "Cn", "r2", "kk", "n_c", "Gq"),
-        term=term,
-        kernel="ball_query",
-        outputs=("Gq",),
-    )
-
-
-def isax_group_agg() -> ISAX:
-    """Grouped feature aggregation: A[j] = max-pool over the rows of F
-    gathered by neighbor list G[j] (the fused PointNet++ set-abstraction
-    datapath: gather + reduce in one pass over the feature array)."""
-    j = var("j")
-    term = for_("j", const(0), var("n_c"), const(1),
-                ("store", arr("Ag"), j,
-                 ("colmax", ("gather", arr("Fg"),
-                             ("load", arr("Gq"), j)))))
-    return ISAX(
-        name="group_agg",
-        params=("Fg", "Gq", "n_c", "Ag"),
-        term=term,
-        kernel="group_aggregate",
-        outputs=("Ag",),
-    )
-
 
 def isax_library() -> list[ISAX]:
-    return [isax_flash_attention(), isax_int8_matvec(), isax_ssd_step(),
-            isax_rmsnorm(), isax_swiglu(), isax_fps(), isax_ball_query(),
-            isax_group_agg()]
+    """Deprecated: the ISAX library is derived from the ``repro.targets``
+    registry.  Use ``repro.targets.isax_library()`` (or iterate
+    ``default_registry().specs()``) instead; this shim survives for one
+    release."""
+    warnings.warn(
+        "repro.core.offload.isax_library() is deprecated; the library is "
+        "derived from the repro.targets registry — call "
+        "repro.targets.isax_library() instead", DeprecationWarning,
+        stacklevel=2)
+    from repro import targets
+    return targets.isax_library()
 
 
-# ---------------------------------------------------------------------------
-# Reference numpy intrinsics (kernels/ops.py registers the fused/Pallas ones)
-# ---------------------------------------------------------------------------
+def __getattr__(name: str):
+    """Back-compat for the moved ISAX factories and numpy evaluators.
 
-def _np_flash_attention(Q, K, V, scale, n_q, P, O):
-    S = (Q @ K.T) * scale
-    Pm = np.exp(S - S.max(axis=-1, keepdims=True))
-    P[:] = Pm / Pm.sum(axis=-1, keepdims=True)
-    O[:] = P @ V
-
-
-def _np_int8_matvec(Wq, X, s_w, n, C):
-    C[:] = (X @ Wq.astype(np.float64).T) * s_w
-
-
-def _np_ssd_scan(A, B, C, X, T, H, Y):
-    h = H[0]
-    for t in range(int(T)):
-        h = A[t] * h + np.outer(B[t], X[t])
-        Y[t] = h.T @ C[t]
-    H[0] = h
+    ``isax_<name>()`` / ``_np_<name>`` now live on the domain packages
+    (``repro.targets.llm``, ``repro.targets.pointcloud``); old imports keep
+    resolving through this hook for one release.
+    """
+    if name.startswith(("isax_", "_np_")):
+        from repro.targets import llm, pointcloud
+        for mod in (llm, pointcloud):
+            if hasattr(mod, name):
+                warnings.warn(
+                    f"repro.core.offload.{name} moved to {mod.__name__}; "
+                    "import it from there (this forwarding shim lasts one "
+                    "release)", DeprecationWarning, stacklevel=2)
+                return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def _np_rmsnorm(Xn, G, eps, n, On):
-    ms = np.mean(Xn * Xn, axis=-1, keepdims=True)
-    On[:] = Xn / np.sqrt(ms + eps) * G
-
-
-def _np_swiglu(Wg, Wu, Wo, Xs, n, Os):
-    g = Xs @ Wg.T
-    u = Xs @ Wu.T
-    Os[:] = (g / (1.0 + np.exp(-g)) * u) @ Wo
-
-
-def _np_fps(Xp, n_s, Dp, Sp):
-    d = Dp[0]
-    for s in range(int(n_s)):
-        Sp[s] = int(np.argmax(d))
-        diff = Xp - Xp[Sp[s]]
-        d = np.minimum(d, (diff * diff).sum(-1))
-    Dp[0] = d
-
-
-def _np_ball_query(Xp, Cn, r2, kk, n_c, Gq):
-    k = int(kk)
-    for j in range(int(n_c)):
-        diff = Xp - Cn[j]
-        d = (diff * diff).sum(-1)
-        hits = np.nonzero(d <= float(r2))[0][:k]
-        if hits.size == 0:
-            Gq[j] = int(np.argmin(d))
-        else:
-            Gq[j, :hits.size] = hits
-            Gq[j, hits.size:] = hits[0]
-
-
-def _np_group_agg(Fg, Gq, n_c, Ag):
-    for j in range(int(n_c)):
-        Ag[j] = Fg[np.asarray(Gq[j], np.int64)].max(axis=0)
-
-
-register_intrinsic("flash_attention", _np_flash_attention)
-register_intrinsic("int8_matvec", _np_int8_matvec)
-register_intrinsic("ssd_step", _np_ssd_scan)
-register_intrinsic("rmsnorm", _np_rmsnorm)
-register_intrinsic("swiglu", _np_swiglu)
-register_intrinsic("fps", _np_fps)
-register_intrinsic("ball_query", _np_ball_query)
-register_intrinsic("group_agg", _np_group_agg)

@@ -24,6 +24,7 @@ from repro.core.kernel_synth import (
     choose_matmul_blocks,
     choose_ssd_blocks,
 )
+from repro.core.tiling import down_pow2
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8mm
@@ -31,6 +32,7 @@ from repro.kernels.pipeline import (
     flash_attention_pipelined as _flash_pipe,
     int8_matmul_pipelined as _int8mm_pipe,
     ssd_scan_pipelined as _ssd_pipe,
+    use_pipeline,
 )
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
@@ -51,21 +53,10 @@ def _ssd_schedule(S: int, H: int, P: int, N: int):
     return choose_ssd_blocks(S, H, P, N)
 
 
-def _use_pipeline(sched, override, n_steps: int) -> bool:
-    """Burst-pipeline routing: the synthesized go/no-go decision unless the
-    caller forces it (``override``); a single streamed tile can never
-    overlap, so it always takes the plain path."""
-    if n_steps < 2:
-        return False
-    return sched.pipelined if override is None else bool(override)
-
-
-def _down_pow2(n: int, cap: int) -> int:
-    """Largest power-of-two divisor of n, at most cap."""
-    d = 1
-    while n % (d * 2) == 0 and d * 2 <= cap:
-        d *= 2
-    return d
+# Back-compat aliases (one release): the tile/routing helpers are public
+# now — ``repro.core.tiling.down_pow2`` and ``kernels.pipeline.use_pipeline``.
+_use_pipeline = use_pipeline
+_down_pow2 = down_pow2
 
 
 def flash_attention_gqa(q, k, v, mask, *, sm_scale: float,
@@ -78,12 +69,12 @@ def flash_attention_gqa(q, k, v, mask, *, sm_scale: float,
     B, S, H, hd = q.shape
     T = k.shape[1]
     sched = _flash_schedule(S, T, hd, q.dtype.itemsize)
-    bq = _down_pow2(S, sched.block("q")[0])
-    bk = _down_pow2(T, sched.block("kv")[0])
+    bq = down_pow2(S, sched.block("q")[0])
+    bk = down_pow2(T, sched.block("kv")[0])
     if S % bq or T % bk or H % k.shape[2]:
         return ref.flash_attention_ref(q, k, v, mask, sm_scale=sm_scale)
     mask = jnp.broadcast_to(mask, (mask.shape[0], S, T))
-    if _use_pipeline(sched, pipelined, T // bk):
+    if use_pipeline(sched, pipelined, T // bk):
         return _flash_pipe(q, k, v, mask, sm_scale=sm_scale, block_q=bq,
                            block_k=bk, depth=max(2, sched.buffering),
                            interpret=interpret)
@@ -99,12 +90,12 @@ def int8_matmul(x, wq, scale, *, interpret: bool = False,
     M, K = x.shape
     N = wq.shape[0]
     sched = _matmul_schedule(M, N, K, 1)
-    bm = _down_pow2(M, sched.block("a")[0])
-    bn = _down_pow2(N, sched.block("b")[1])
-    bk = _down_pow2(K, sched.block("a")[1])
+    bm = down_pow2(M, sched.block("a")[0])
+    bn = down_pow2(N, sched.block("b")[1])
+    bk = down_pow2(K, sched.block("a")[1])
     if M % bm or N % bn or K % bk:
         return ref.int8_matmul_ref(x, wq, scale)
-    if _use_pipeline(sched, pipelined, K // bk):
+    if use_pipeline(sched, pipelined, K // bk):
         return _int8mm_pipe(x, wq, scale, block_m=bm, block_n=bn,
                             block_k=bk, depth=max(2, sched.buffering),
                             interpret=interpret)
@@ -120,10 +111,10 @@ def ssd_scan(x, dt, A, B, C, *, interpret: bool = False,
     BT, H, S, P = x.shape
     N = B.shape[-1]
     sched = _ssd_schedule(S, H, P, N)
-    chunk = _down_pow2(S, sched.block("chunk")[0])
+    chunk = down_pow2(S, sched.block("chunk")[0])
     if S % chunk:
         return ref.ssd_scan_ref(x, dt, A, B, C)
-    if _use_pipeline(sched, pipelined, S // chunk):
+    if use_pipeline(sched, pipelined, S // chunk):
         return _ssd_pipe(x, dt, A, B, C, chunk=chunk,
                          depth=max(2, sched.buffering), interpret=interpret)
     return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
@@ -132,7 +123,7 @@ def ssd_scan(x, dt, A, B, C, *, interpret: bool = False,
 def rmsnorm(x, g, *, eps: float = 1e-6, interpret: bool = False):
     """Row-blocked RMSNorm: x (R,d), g (d) → (R,d)."""
     R = x.shape[0]
-    br = _down_pow2(R, 256)
+    br = down_pow2(R, 256)
     return _rmsnorm(x, g, eps=eps, block_rows=br, interpret=interpret)
 
 

@@ -56,6 +56,19 @@ from repro.kernels.flash_attention import (
 DEFAULT_DEPTH = 2
 
 
+def use_pipeline(sched, override: bool | None, n_steps: int) -> bool:
+    """Burst-pipeline routing rule shared by every op wrapper.
+
+    The synthesized go/no-go decision (``sched.pipelined``) unless the
+    caller forces it (``override``); a single streamed tile can never
+    overlap, so it always takes the plain path.  Public home of the old
+    ``kernels/ops._use_pipeline`` (it crossed module boundaries privately).
+    """
+    if n_steps < 2:
+        return False
+    return sched.pipelined if override is None else bool(override)
+
+
 class BurstPipeline:
     """Multi-buffered HBM→VMEM tile streamer for use inside kernel bodies.
 

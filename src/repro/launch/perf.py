@@ -123,7 +123,7 @@ def build_variant(arch: str, shape_name: str, mesh, variant: str):
             pos = jnp.broadcast_to(jnp.arange(S)[None], (x.shape[0], S))
 
             def body(h, p):
-                h2, _, _ = T._block_fwd(cfg, h, p, msk, pos)
+                h2, _, _ = T.block_fwd(cfg, h, p, msk, pos)
                 return h2, None
 
             h, _ = jax.lax.scan(body, x, bp)

@@ -39,7 +39,7 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    lowering = LoweringConfig(backend=args.backend)
+    lowering = LoweringConfig.from_registry(backend=args.backend)
 
     if args.continuous:
         ps = args.page_size

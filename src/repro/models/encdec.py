@@ -29,7 +29,7 @@ def _cross_attention(params, x, enc_out, cfg: ModelConfig, mask, lowering):
                    params["wk"].astype(cd))
     v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd),
                    params["wv"].astype(cd))
-    out = L._sdpa(q, k, v, mask, hd, lowering, kind="attention")
+    out = L.sdpa(q, k, v, mask, hd, lowering, kind="attention")
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
 
 

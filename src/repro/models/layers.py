@@ -246,9 +246,10 @@ def _sdpa_chunked(q, k, v, mask, head_dim: int, chunk: int = 1024):
     return (acc / denom).astype(q.dtype).reshape(B, S, H, hd)
 
 
-def _sdpa(q, k, v, mask, head_dim: int, lowering: LoweringConfig,
-          kind: str = "attention"):
-    """Dispatch-routed scaled-dot-product attention.
+def sdpa(q, k, v, mask, head_dim: int, lowering: LoweringConfig,
+         kind: str = "attention"):
+    """Dispatch-routed scaled-dot-product attention (public: the enc-dec
+    family calls it for cross attention).
 
     The compile cache decides the implementation per (kind, shape, dtype,
     backend); the ISAX kernel entry point is pre-resolved in the record (no
@@ -265,13 +266,16 @@ def _sdpa(q, k, v, mask, head_dim: int, lowering: LoweringConfig,
     return _sdpa_xla(q, k, v, mask, head_dim)
 
 
+_sdpa = sdpa  # back-compat alias (one release): use layers.sdpa
+
+
 def attention(params, x, cfg: ModelConfig, mask, positions,
               lowering: Optional[LoweringConfig] = None):
     """Full-sequence attention (train/prefill).  Returns (out, (k, v))."""
     lw = lowering or default_lowering()
     hd = cfg.resolved_head_dim()
     q, k, v = _qkv(params, x, cfg, positions)
-    out = _sdpa(q, k, v, mask, hd, lw, kind="attention")
+    out = sdpa(q, k, v, mask, hd, lw, kind="attention")
     cd = dtype_of(cfg.compute_dtype)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)), (k, v)
 
@@ -291,7 +295,7 @@ def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache, pos,
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
     T = k_cache.shape[1]
     mask = (jnp.arange(T)[None, None, :] <= pos)  # (1,1,T)
-    out = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+    out = sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                 jnp.broadcast_to(mask, (x.shape[0], 1, T)), hd, lw,
                 kind="attention_decode")
     cd = dtype_of(cfg.compute_dtype)
@@ -332,7 +336,7 @@ def attention_decode_paged(params, x, cfg: ModelConfig, k_pages, v_pages,
     kg = k_pages[page_table].reshape(B, P * page, *k_pages.shape[2:])
     vg = v_pages[page_table].reshape(B, P * page, *v_pages.shape[2:])
     mask = jnp.arange(P * page)[None, None, :] <= seq_lens[:, None, None]
-    out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, hd, lw,
+    out = sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, hd, lw,
                 kind="attention_paged")
     cd = dtype_of(cfg.compute_dtype)
     return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd)),

@@ -86,7 +86,7 @@ def param_axes(cfg: ModelConfig) -> dict:
 # Forward
 # ---------------------------------------------------------------------------
 
-def _block_fwd(cfg: ModelConfig, x, bp, mask, positions, lowering):
+def block_fwd(cfg: ModelConfig, x, bp, mask, positions, lowering=None):
     x = L.shard_act(x, "btd")
     a, kv = L.attention(bp["attn"],
                         L.rmsnorm(bp["attn_norm"], x, cfg.norm_eps,
@@ -106,6 +106,9 @@ def _block_fwd(cfg: ModelConfig, x, bp, mask, positions, lowering):
     return x + y, aux, kv
 
 
+_block_fwd = block_fwd  # back-compat alias (one release): use block_fwd
+
+
 def backbone(params, x, cfg: ModelConfig, mask, positions,
              collect_kv: bool = False,
              lowering: Optional[LoweringConfig] = None):
@@ -114,7 +117,7 @@ def backbone(params, x, cfg: ModelConfig, mask, positions,
 
     def body(carry, bp):
         h, aux = carry
-        h2, a, kv = _block_fwd(cfg, h, bp, mask, positions, lw)
+        h2, a, kv = block_fwd(cfg, h, bp, mask, positions, lw)
         ys = kv if collect_kv else None
         return (h2, aux + a), ys
 

@@ -27,7 +27,8 @@ from repro.core.kernel_synth import (
     choose_group_blocks,
     fps_vmem_bytes,
 )
-from repro.kernels.ops import _down_pow2, _use_pipeline
+from repro.core.tiling import down_pow2
+from repro.kernels.pipeline import use_pipeline
 from repro.pointcloud import kernels as pck
 from repro.pointcloud import ref as pcref
 
@@ -51,15 +52,15 @@ def pc_tiles(M: int, N: int, sched, stream_key: str):
     """Derive (bm, bn) power-of-two tiles from a synthesized schedule, or
     None when the shape is untileable.
 
-    ``_down_pow2`` always divides, so divisibility can't fail — instead a
+    ``down_pow2`` always divides, so divisibility can't fail — instead a
     shape with a large odd factor *degrades*: its biggest power-of-two
     divisor collapses toward 1-wide tiles.  Those degenerate launches are
     worse than the XLA reference, so "untileable" means the derived tile
     fell below the meaningful minimum (8 sublanes of centers, 128 lanes of
     streamed rows — or the whole axis when it is smaller than that).
     """
-    bm = _down_pow2(M, sched.block("centers")[0])
-    bn = _down_pow2(N, sched.block(stream_key)[0])
+    bm = down_pow2(M, sched.block("centers")[0])
+    bn = down_pow2(N, sched.block(stream_key)[0])
     if bm < min(M, 8) or bn < min(N, 128):
         return None
     return bm, bn
@@ -94,7 +95,7 @@ def ball_query(xyz, centers, radius: float, k: int, *,
         return pcref.ball_query_ref(xyz, centers, radius, k,
                                     radius_sq=radius_sq)
     bm, bn = tiles
-    if _use_pipeline(sched, pipelined, N // bn):
+    if use_pipeline(sched, pipelined, N // bn):
         return pck.ball_query_pipelined(
             xyz, centers, radius, k, block_m=bm, block_n=bn,
             depth=max(2, sched.buffering), interpret=interpret,
@@ -115,7 +116,7 @@ def group_aggregate(features, idx, *, interpret: bool = False,
     if tiles is None:
         return pcref.group_aggregate_ref(features, idx)
     bm, bn = tiles
-    if _use_pipeline(sched, pipelined, N // bn):
+    if use_pipeline(sched, pipelined, N // bn):
         return pck.group_aggregate_pipelined(
             features, idx, block_m=bm, block_n=bn,
             depth=max(2, sched.buffering), interpret=interpret)

@@ -109,7 +109,8 @@ class ServeEngine:
         # obtain attention/rmsnorm/matmul implementations from the
         # repro.compile dispatcher through this LoweringConfig (env override
         # REPRO_ATTENTION_IMPL is read by its constructor).
-        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.lowering = (lowering if lowering is not None
+                         else LoweringConfig.from_registry())
         self.model = get_model(model_cfg, lowering=self.lowering)
         self.max_len = max_len
         # (memory model: int8 at rest, dequantized once on load — wire/HBM
@@ -213,7 +214,8 @@ class ContinuousEngine:
                  quantize: bool = False, seed: int = 0,
                  lowering: Optional[LoweringConfig] = None):
         self.cfg = model_cfg
-        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.lowering = (lowering if lowering is not None
+                         else LoweringConfig.from_registry())
         self.model = get_model(model_cfg, lowering=self.lowering)
         if self.model.decode_paged is None:
             raise ValueError(
@@ -380,7 +382,8 @@ class StaticBatchEngine:
                  quantize: bool = False, seed: int = 0,
                  lowering: Optional[LoweringConfig] = None):
         self.cfg = model_cfg
-        self.lowering = lowering if lowering is not None else LoweringConfig()
+        self.lowering = (lowering if lowering is not None
+                         else LoweringConfig.from_registry())
         self.model = get_model(model_cfg, lowering=self.lowering)
         self.params = _init_params(self.model, params, quantize, seed)
         self.batch = batch

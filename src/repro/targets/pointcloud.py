@@ -1,0 +1,281 @@
+"""The point-cloud domain package (the paper's second application domain).
+
+Farthest-point sampling, ball-query grouping, and grouped feature
+aggregation — a PointNet++-style set-abstraction stage — as a
+self-contained :class:`~repro.targets.registry.DomainPackage`: divergent
+trace programs (expanded ‖a‖²+‖b‖²−2ab distance, neg∘colmin∘neg max-pool),
+ISAX definitions, numpy evaluator semantics, kernel-synth schedulers, and
+the Pallas entry points from ``repro/pointcloud``.  Registered by
+``repro.targets`` after the ``llm`` domain; the generic dispatch engine
+never imports anything in here by name.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.expr import Term, arr, const, for_, var
+from repro.core.interface_model import TPU_VMEM_BUDGET
+from repro.core.kernel_synth import (
+    choose_ball_blocks,
+    choose_fps_blocks,
+    choose_group_blocks,
+    fps_vmem_bytes,
+    pipeline_fields,
+)
+from repro.core.matching import ISAX
+from repro.core.tiling import dtype_itemsize
+from repro.pointcloud import ops as pcops
+from repro.pointcloud.kernels import (
+    ball_query_pipelined,
+    group_aggregate_pipelined,
+)
+from repro.targets.registry import DomainPackage, IsaxSpec
+
+if TYPE_CHECKING:
+    from repro.compile.trace import OpKey
+
+
+# ---------------------------------------------------------------------------
+# Trace programs (software-side spellings, AF/RF-divergent from the ISAXes)
+# ---------------------------------------------------------------------------
+
+def _sqdist_expanded(a, b):
+    """Row-wise squared distance in the *expanded* spelling
+    ‖a‖² + (‖b‖² − 2·a·b): AF-divergent from the ISAXes' compact
+    rowsum((a−b)²) form — ``rewrites.sqdist-expand`` must bridge the gap."""
+    return ("+", ("rowsum", ("*", a, a)),
+            ("-", ("rowsum", ("*", b, b)),
+             ("*", ("const:2",), ("rowsum", ("*", a, b)))))
+
+
+def _fps_program() -> Term:
+    """Farthest-point sampling with the distance spelled expanded; the
+    loop-carried dependences (S feeds the same iteration's distance update,
+    D feeds the next iteration's argmax) must survive saturation."""
+    s = var("s")
+    picked = ("load", arr("Xp"), ("load", arr("Sp"), s))
+    return for_("s", const(0), var("n_s"), const(1),
+                ("store", arr("Sp"), s,
+                 ("argmax", ("load", arr("Dp"), const(0)))),
+                ("store", arr("Dp"), const(0),
+                 ("min", ("load", arr("Dp"), const(0)),
+                  _sqdist_expanded(arr("Xp"), picked))))
+
+
+def _ball_query_program() -> Term:
+    """Ball query with the expanded distance spelling (same AF divergence
+    as fps, exercised under a different skeleton)."""
+    j = var("j")
+    return for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Gq"), j,
+                 ("ballsel",
+                  _sqdist_expanded(arr("Xp"), ("load", arr("Cn"), j)),
+                  var("r2"), var("kk"))))
+
+
+def _group_agg_program() -> Term:
+    """Grouped aggregation with max-pool spelled as neg∘colmin∘neg
+    (RF-divergent; ``rewrites.colmax-neg-colmin`` recovers the ISAX form)."""
+    j = var("j")
+    gathered = ("gather", arr("Fg"), ("load", arr("Gq"), j))
+    return for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Ag"), j,
+                 ("neg", ("colmin", ("neg", gathered)))))
+
+
+# ---------------------------------------------------------------------------
+# ISAX definitions
+# ---------------------------------------------------------------------------
+
+def _sqdist(a: Term, b: Term) -> Term:
+    """Compact row-wise squared distance ‖a − b‖² (the ISAX-side spelling)."""
+    return ("rowsum", ("*", ("-", a, b), ("-", a, b)))
+
+
+def isax_fps() -> ISAX:
+    """Farthest-point sampling: S[s] = argmax of the running min-distance,
+    D ← min(D, ‖X − X[S[s]]‖²).  Loop-carried dependences through *both*
+    outputs (S feeds the distance update of the same iteration, D feeds the
+    argmax of the next) — the point-cloud stress test for the §5.4
+    loop-carried checks."""
+    s = var("s")
+    term = for_("s", const(0), var("n_s"), const(1),
+                ("store", arr("Sp"), s,
+                 ("argmax", ("load", arr("Dp"), const(0)))),
+                ("store", arr("Dp"), const(0),
+                 ("min", ("load", arr("Dp"), const(0)),
+                  _sqdist(arr("Xp"),
+                          ("load", arr("Xp"), ("load", arr("Sp"), s))))))
+    return ISAX(
+        name="fps",
+        params=("Xp", "n_s", "Dp", "Sp"),
+        term=term,
+        kernel="fps",
+        outputs=("Dp", "Sp"),
+    )
+
+
+def isax_ball_query() -> ISAX:
+    """Ball query / kNN grouping: G[j] = first-kk indices of X within
+    radius² of center j (padded; nearest point when the ball is empty).
+    The irregular-gather front half of PointNet++ set abstraction."""
+    j = var("j")
+    term = for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Gq"), j,
+                 ("ballsel",
+                  _sqdist(arr("Xp"), ("load", arr("Cn"), j)),
+                  var("r2"), var("kk"))))
+    return ISAX(
+        name="ball_query",
+        params=("Xp", "Cn", "r2", "kk", "n_c", "Gq"),
+        term=term,
+        kernel="ball_query",
+        outputs=("Gq",),
+    )
+
+
+def isax_group_agg() -> ISAX:
+    """Grouped feature aggregation: A[j] = max-pool over the rows of F
+    gathered by neighbor list G[j] (the fused PointNet++ set-abstraction
+    datapath: gather + reduce in one pass over the feature array)."""
+    j = var("j")
+    term = for_("j", const(0), var("n_c"), const(1),
+                ("store", arr("Ag"), j,
+                 ("colmax", ("gather", arr("Fg"),
+                             ("load", arr("Gq"), j)))))
+    return ISAX(
+        name="group_agg",
+        params=("Fg", "Gq", "n_c", "Ag"),
+        term=term,
+        kernel="group_aggregate",
+        outputs=("Ag",),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Evaluator semantics (numpy oracles; pointcloud/ops.py's
+# register_pointcloud_intrinsics overrides them with the kernel datapaths)
+# ---------------------------------------------------------------------------
+
+def _np_fps(Xp, n_s, Dp, Sp):
+    d = Dp[0]
+    for s in range(int(n_s)):
+        Sp[s] = int(np.argmax(d))
+        diff = Xp - Xp[Sp[s]]
+        d = np.minimum(d, (diff * diff).sum(-1))
+    Dp[0] = d
+
+
+def _np_ball_query(Xp, Cn, r2, kk, n_c, Gq):
+    k = int(kk)
+    for j in range(int(n_c)):
+        diff = Xp - Cn[j]
+        d = (diff * diff).sum(-1)
+        hits = np.nonzero(d <= float(r2))[0][:k]
+        if hits.size == 0:
+            Gq[j] = int(np.argmin(d))
+        else:
+            Gq[j, :hits.size] = hits
+            Gq[j, hits.size:] = hits[0]
+
+
+def _np_group_agg(Fg, Gq, n_c, Ag):
+    for j in range(int(n_c)):
+        Ag[j] = Fg[np.asarray(Gq[j], np.int64)].max(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+def _fps_schedule(key: "OpKey"):
+    B, N, S = key.shape
+    if S > N:
+        return None, f"more samples than points (S={S} > N={N})"
+    db = dtype_itemsize(key.dtype)
+    if fps_vmem_bytes(N, S, db) > TPU_VMEM_BUDGET:
+        # FPS has no tiling to shrink — an oversized cloud takes the
+        # reference, exactly as the pointcloud/ops wrapper does
+        return None, f"point set exceeds VMEM (N={N})"
+    sched = choose_fps_blocks(N, S, db)
+    return ({"n_points": N, "n_samples": S, "buffering": sched.buffering,
+             "vmem_bytes": sched.vmem_bytes,
+             **pipeline_fields(sched)}, "ok")
+
+
+def _ball_schedule(key: "OpKey"):
+    B, N, M, K = key.shape
+    sched = choose_ball_blocks(M, N, K, dtype_itemsize(key.dtype))
+    tiles = pcops.pc_tiles(M, N, sched, "x")
+    if tiles is None:
+        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
+    return ({"block_m": tiles[0], "block_n": tiles[1],
+             "buffering": sched.buffering,
+             **pipeline_fields(sched)}, "ok")
+
+
+def _group_schedule(key: "OpKey"):
+    B, N, M, K, C = key.shape
+    sched = choose_group_blocks(M, N, K, C, dtype_itemsize(key.dtype))
+    tiles = pcops.pc_tiles(M, N, sched, "f")
+    if tiles is None:
+        return None, f"untileable shape M={M} N={N} (pow2 tiles degrade)"
+    return ({"block_m": tiles[0], "block_n": tiles[1],
+             "buffering": sched.buffering,
+             **pipeline_fields(sched)}, "ok")
+
+
+# ---------------------------------------------------------------------------
+# The domain package
+# ---------------------------------------------------------------------------
+
+DOMAIN = DomainPackage(
+    name="pointcloud",
+    description="Point-cloud set abstraction (FPS → ball query → grouped "
+                "aggregation), the second application domain.",
+    specs=(
+        IsaxSpec(
+            name="fps",
+            isax=isax_fps,
+            evaluator=_np_fps,
+            trace_kind="fps",
+            trace_program=_fps_program,
+            ops=("fps",),
+            rewrites=("sqdist-expand",),
+            scheduler=_fps_schedule,
+            kernel=pcops.farthest_point_sample,
+            op_notes=(("fps", "loop-carried argmax; never pipelined"),),
+            description="Farthest-point sampling (VMEM-resident cloud).",
+        ),
+        IsaxSpec(
+            name="ball_query",
+            isax=isax_ball_query,
+            evaluator=_np_ball_query,
+            trace_kind="ball_query",
+            trace_program=_ball_query_program,
+            ops=("ball_query",),
+            rewrites=("sqdist-expand",),
+            scheduler=_ball_schedule,
+            kernel=pcops.ball_query,
+            kernel_pipelined=ball_query_pipelined,
+            description="Radius neighbor grouping over streamed X tiles.",
+        ),
+        IsaxSpec(
+            name="group_agg",
+            isax=isax_group_agg,
+            evaluator=_np_group_agg,
+            trace_kind="group_aggregate",
+            trace_program=_group_agg_program,
+            ops=("group_aggregate",),
+            rewrites=("colmax-neg-colmin",),
+            scheduler=_group_schedule,
+            kernel=pcops.group_aggregate,
+            kernel_pipelined=group_aggregate_pipelined,
+            description="Grouped max-pool aggregation "
+                        "(gather-as-one-hot-matmul).",
+        ),
+    ),
+)

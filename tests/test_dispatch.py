@@ -9,13 +9,13 @@ import numpy as np
 import pytest
 
 from repro.compile import (LoweringConfig, Dispatcher, OpKey, TARGET_ISAX,
-                           get_dispatcher)
+                           get_dispatcher, lower)
 from repro.configs.base import reduced
-from repro.configs.registry import _MODULES, get_config
+from repro.configs.registry import available_configs, get_config
 from repro.models.registry import get_model
 from repro.serve.kv_cache import PagedKVCache
 
-ARCHS = sorted(_MODULES)
+ARCHS = sorted(available_configs())
 RNG = np.random.default_rng(0)
 
 
@@ -86,8 +86,23 @@ class TestLoweringDecisions:
         assert rec.impl == "chunked"
 
     def test_unknown_op_rejected(self):
+        """Op validation is a registry decision now (custom registries may
+        know ops the global one does not), so the engine rejects at
+        lowering time with the list of valid ops."""
+        with pytest.raises(ValueError, match="known:"):
+            Dispatcher().lower(OpKey("conv3d", (1,), "float32", "xla"))
         with pytest.raises(ValueError):
-            OpKey("conv3d", (1,), "float32", "xla")
+            OpKey("", (1,), "float32", "xla")
+
+    def test_top_level_lower_entry_point(self):
+        """repro.compile.lower is the public one-shot API over the shared
+        process-wide cache."""
+        rec = lower("rmsnorm", shape=(32, 64), dtype="float32",
+                    backend="pallas_interpret")
+        assert rec.impl == "isax"
+        again = lower("rmsnorm", shape=(32, 64), dtype="float32",
+                      backend="pallas_interpret")
+        assert again is rec  # same CompileRecord from the shared cache
 
 
 # ---------------------------------------------------------------------------

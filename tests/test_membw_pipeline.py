@@ -20,6 +20,7 @@ from repro.kernels.pipeline import (
     flash_attention_pipelined,
     int8_matmul_pipelined,
     ssd_scan_pipelined,
+    use_pipeline,
 )
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -167,12 +168,12 @@ def test_ops_wrappers_honor_synthesis_decision():
     """With one streamed tile the wrapper must not pipeline even when the
     caller forces it (nothing to overlap)."""
     sched = choose_flash_blocks(64, 64, 64)
-    assert ops._use_pipeline(sched, None, 1) is False
-    assert ops._use_pipeline(sched, True, 1) is False
-    assert ops._use_pipeline(sched, True, 4) is True
-    assert ops._use_pipeline(sched, False, 4) is False
+    assert use_pipeline(sched, None, 1) is False
+    assert use_pipeline(sched, True, 1) is False
+    assert use_pipeline(sched, True, 4) is True
+    assert use_pipeline(sched, False, 4) is False
     rich = choose_flash_blocks(1024, 4096, 128)
-    assert ops._use_pipeline(rich, None, 32) == rich.pipelined
+    assert use_pipeline(rich, None, 32) == rich.pipelined
 
 
 def test_dispatch_records_pipeline_decision():

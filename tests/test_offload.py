@@ -8,12 +8,11 @@ import pytest
 from repro.core import expr
 from repro.core.expr import arr, const, for_, var
 from repro.core.matching import decompose
-from repro.core.offload import (
-    compile_program,
-    evaluate,
+from repro.core.offload import compile_program, evaluate
+from repro.targets import isax_library
+from repro.targets.llm import (
     isax_flash_attention,
     isax_int8_matvec,
-    isax_library,
     isax_rmsnorm,
     isax_ssd_step,
 )
@@ -179,7 +178,7 @@ class TestRMSNorm:
 class TestSwiGLU:
     def test_sigmoid_form_variants_match(self):
         """silu spelled x/(1+e^-x) vs x·recip(1+e^-x) — both offload."""
-        from repro.core.offload import isax_swiglu
+        from repro.targets.llm import isax_swiglu
         from repro.core.expr import arr, const, for_, var
         ix = isax_swiglu()
         i = var("i")

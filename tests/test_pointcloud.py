@@ -15,7 +15,8 @@ from repro.core.kernel_synth import (
     choose_fps_blocks,
     choose_group_blocks,
 )
-from repro.core.offload import compile_program, evaluate, isax_library
+from repro.core.offload import compile_program, evaluate
+from repro.targets import isax_library
 from repro.pointcloud import kernels as pck
 from repro.pointcloud import ops as pcops
 from repro.pointcloud import ref as pcref

@@ -13,7 +13,8 @@ from repro.configs.registry import get_config
 from repro.core import aquas_ir as ir
 from repro.core.expr import arr, const, for_, var
 from repro.core.interface_model import tpu_interfaces
-from repro.core.offload import compile_program, evaluate, isax_library
+from repro.core.offload import compile_program, evaluate
+from repro.targets import isax_library
 from repro.core.synthesis import synthesize
 from repro.kernels.ops import register_kernel_intrinsics
 

@@ -1,0 +1,91 @@
+"""A toy third application domain in ONE file — the acceptance proof of the
+registry redesign.
+
+This module is everything a new domain needs: a divergent software trace
+program, an ISAX skeleton/component definition, numpy evaluator semantics,
+a scheduler, and a kernel entry point, bundled into a ``DomainPackage``.
+The test suite registers it with **one line** into a fresh registry and the
+unchanged generic dispatch engine matches, schedules, caches, and
+dispatches it — no edit to ``compile/dispatch.py``, ``core/offload.py``,
+or any other engine module.
+
+The op is a scaled row accumulate ("axpy rows"): O[i] = a·X[i] + Y[i].
+The software spelling commutes both operands (Y first, scale on the right)
+so matching requires the ``add-comm``/``mul-comm`` internal rewrites —
+a real (if small) saturation theorem, not string equality.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.expr import arr, const, for_, var
+from repro.core.matching import ISAX
+from repro.core.tiling import down_pow2
+from repro.targets.registry import DomainPackage, IsaxSpec
+
+
+def _axpy_program():
+    """Software spelling: O[i] = Y[i] + (X[i] * a) — commuted twice."""
+    i = var("i")
+    return for_("i", const(0), var("n"), const(1),
+                ("store", arr("Oy"), i,
+                 ("+", ("load", arr("Y"), i),
+                  ("*", ("load", arr("X"), i), var("a")))))
+
+
+def isax_axpy() -> ISAX:
+    """ISAX spelling: O[i] = a * X[i] + Y[i]."""
+    i = var("i")
+    term = for_("i", const(0), var("n"), const(1),
+                ("store", arr("Oy"), i,
+                 ("+", ("*", var("a"), ("load", arr("X"), i)),
+                  ("load", arr("Y"), i))))
+    return ISAX(
+        name="axpy",
+        params=("X", "Y", "a", "n", "Oy"),
+        term=term,
+        kernel="axpy",
+        outputs=("Oy",),
+    )
+
+
+def _np_axpy(X, Y, a, n, Oy):
+    Oy[:] = a * X + Y
+
+
+def _axpy_schedule(key):
+    rows, d = key.shape
+    return {"block_rows": down_pow2(rows, 128)}, "ok"
+
+
+def axpy_kernel(x, y, a, *, interpret: bool = False):
+    """The "hardware" entry point (jnp stands in for a Pallas kernel: the
+    dispatch contract only requires a bound callable)."""
+    return a * jnp.asarray(x) + jnp.asarray(y)
+
+
+def axpy_ref(x, y, a):
+    """Reference oracle for parity checks."""
+    return np.asarray(a) * np.asarray(x) + np.asarray(y)
+
+
+DOMAIN = DomainPackage(
+    name="toy",
+    description="Single-file third domain proving registry retargetability.",
+    specs=(
+        IsaxSpec(
+            name="axpy",
+            isax=isax_axpy,
+            evaluator=_np_axpy,
+            trace_kind="axpy",
+            trace_program=_axpy_program,
+            ops=("axpy",),
+            rewrites=("add-comm", "mul-comm"),
+            scheduler=_axpy_schedule,
+            kernel=axpy_kernel,
+            description="Scaled row accumulate O[i] = a·X[i] + Y[i].",
+        ),
+    ),
+)

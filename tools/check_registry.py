@@ -1,0 +1,71 @@
+"""Registry lint for CI: every registered ISAX must be benchable and tested.
+
+Asserts, for every dispatchable ISAX spec in the global registry
+(``isax`` set and at least one dispatch op):
+
+* it resolves end to end (kernel entry point, scheduler, trace program,
+  evaluator — via ``IsaxSpec.validate``),
+* its declared bridging rewrites exist in ``core/rewrites.internal_rules``,
+* it appears in ``benchmarks/bench_compile_stats.py``'s sweep (by spec
+  name or by one of its ops), so ``BENCH_compile.json`` tracks it,
+* it has at least one parity test under ``tests/`` mentioning it.
+
+Run: ``python tools/check_registry.py`` (exit 1 with the violations).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main() -> None:
+    from repro.core.rewrites import internal_rules
+    from repro.targets import default_registry
+
+    reg = default_registry()
+    bench_src = (ROOT / "benchmarks" / "bench_compile_stats.py").read_text()
+    test_srcs = {p.name: p.read_text()
+                 for p in (ROOT / "tests").glob("test_*.py")}
+    rule_names = {r.name for r in internal_rules()}
+
+    errors: list[str] = []
+    for spec in reg.specs():
+        try:
+            spec.validate()
+        except ValueError as e:
+            errors.append(f"{spec.name}: {e}")
+            continue
+        missing_rules = set(spec.rewrites) - rule_names
+        if missing_rules:
+            errors.append(f"{spec.name}: declares unknown bridging "
+                          f"rewrites {sorted(missing_rules)}")
+        if spec.isax is None or not spec.ops:
+            continue  # negative controls / library-only specs
+        mentions = (spec.name,) + spec.ops
+        if not any(m in bench_src for m in mentions):
+            errors.append(
+                f"{spec.name}: not covered by bench_compile_stats' sweep "
+                f"(none of {mentions} appear) — BENCH_compile.json would "
+                f"not track it")
+        tested_in = [fn for fn, src in test_srcs.items()
+                     if any(m in src for m in mentions)]
+        if not tested_in:
+            errors.append(f"{spec.name}: no parity test under tests/ "
+                          f"mentions {mentions}")
+
+    if errors:
+        print("registry lint FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        raise SystemExit(1)
+    n = sum(1 for s in reg.specs() if s.isax is not None and s.ops)
+    print(f"registry lint OK: {n} dispatchable ISAXes across "
+          f"{len(reg.domains())} domains, all benched and tested")
+
+
+if __name__ == "__main__":
+    main()
